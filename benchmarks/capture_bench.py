@@ -1,0 +1,44 @@
+"""Paper Table 3: kernel-capture time and size vs grid size and precision.
+
+Captures real arrays (like the paper), so sizes match exactly:
+3 (or 4) fields x nx*ny*nz x dtype bytes.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import write_capture
+
+GRIDS = ((64, 64, 128), (128, 128, 256))   # scaled-down 256^3/512^3 pair
+DTYPES = ("float32", "bfloat16")
+
+
+def run() -> list[str]:
+    import jax.numpy as jnp
+    rows = [
+        "capture_bench,kernel,grid,dtype,capture_seconds,capture_mb"]
+    rng = np.random.default_rng(0)
+    with tempfile.TemporaryDirectory() as d:
+        for kernel, nfields in (("advec_u", 3), ("diff_uvw", 4)):
+            for grid in GRIDS:
+                for dtype in DTYPES:
+                    fields = [np.asarray(jnp.asarray(
+                        rng.standard_normal(grid), dtype))
+                        for _ in range(nfields)]
+                    scal = np.array([[1.0, 1.0, 1.0, 0]], np.float32)
+                    t0 = time.perf_counter()
+                    p = write_capture(kernel, grid, dtype,
+                                      fields + [scal], out_dir=d)
+                    dt = time.perf_counter() - t0
+                    size = sum(f.stat().st_size
+                               for f in Path(d).glob(
+                                   p.stem.replace(".capture", "") + "*"))
+                    rows.append(
+                        f"capture_bench,{kernel},{grid[0]}x{grid[1]}x"
+                        f"{grid[2]},{dtype},{dt:.3f},{size/2**20:.1f}")
+    return rows

@@ -1,0 +1,46 @@
+"""Shared benchmark machinery: the 16-scenario MicroHH table (paper §5) on
+the simulated device pair, with a per-scenario tuning cache so the expensive
+random-search population is computed once per process."""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.configs.microhh import Scenario, scenarios
+from repro.core import get_device, get_kernel
+from repro.tuner import CostModelEvaluator
+from repro.tuner.strategies import TuningResult, tune_random
+
+# Benchmarks run the paper's full 256^3 / 512^3 grids through the simulated
+# objective (no allocation happens for cost-model scoring).
+BENCH_SCENARIOS: list[Scenario] = scenarios()
+
+
+def evaluator(sc: Scenario) -> CostModelEvaluator:
+    return CostModelEvaluator(get_kernel(sc.kernel), sc.grid, sc.dtype,
+                              get_device(sc.device), verify="none")
+
+
+@functools.lru_cache(maxsize=None)
+def population(key: str, max_evals: int = 300) -> TuningResult:
+    """Random-search population for one scenario (Fig 2's histogram data +
+    the scenario's budgeted optimum)."""
+    sc = next(s for s in BENCH_SCENARIOS if s.key == key)
+    b = get_kernel(sc.kernel)
+    return tune_random(b.space, evaluator(sc), max_evals=max_evals,
+                       rng=np.random.default_rng(hash(key) % 2**31))
+
+
+def best_config(key: str) -> tuple[dict, float]:
+    res = population(key)
+    return res.best_config, res.best_score_us
+
+
+def score(sc: Scenario, config: dict) -> float:
+    return evaluator(sc)(config).score_us
+
+
+def csv_row(*fields) -> str:
+    return ",".join(str(f) for f in fields)

@@ -1,0 +1,36 @@
+"""Paper Fig 2: per-scenario performance distribution histograms, with the
+default config's fraction-of-optimum and configuration C (the optimum of the
+first scenario) transplanted into every other scenario."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import get_kernel
+
+from .common import BENCH_SCENARIOS, best_config, population, score
+
+
+def run() -> list[str]:
+    rows = ["distribution,scenario,frac_within_10pct,default_frac,"
+            "configC_frac,n_configs"]
+    ref_key = BENCH_SCENARIOS[0].key        # advec_u-256^3-float32-tpu-v5e
+    config_c, _ = best_config(ref_key)
+    for sc in BENCH_SCENARIOS:
+        res = population(sc.key)
+        scores = np.array([e.score_us for e in res.feasible_evaluations])
+        opt = scores.min()
+        within = float((scores <= opt / 0.9).mean())
+        b = get_kernel(sc.kernel)
+        default_frac = opt / score(sc, b.default_config())
+        c_frac = opt / score(sc, config_c)
+        rows.append(f"distribution,{sc.key},{within:.3f},"
+                    f"{default_frac:.3f},{c_frac:.3f},{len(scores)}")
+    # paper headline: mean default fraction (~0.75 in the paper)
+    fracs = []
+    for sc in BENCH_SCENARIOS:
+        res = population(sc.key)
+        opt = res.best_score_us
+        fracs.append(opt / score(sc, get_kernel(sc.kernel).default_config()))
+    rows.append(f"distribution,MEAN_DEFAULT_FRACTION,,{np.mean(fracs):.3f},,")
+    return rows

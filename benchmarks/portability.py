@@ -1,0 +1,21 @@
+"""Paper Fig 4: the NxN portability matrix — how the optimum of scenario i
+performs in scenario j, as a fraction of scenario j's own optimum."""
+
+from __future__ import annotations
+
+from .common import BENCH_SCENARIOS, best_config, score
+
+
+def run() -> list[str]:
+    kernels = sorted({s.kernel for s in BENCH_SCENARIOS})
+    rows = ["portability,kernel,from_scenario,to_scenario,fraction"]
+    for kernel in kernels:
+        scs = [s for s in BENCH_SCENARIOS if s.kernel == kernel]
+        opt = {s.key: best_config(s.key) for s in scs}
+        for si in scs:
+            cfg_i, _ = opt[si.key]
+            for sj in scs:
+                frac = opt[sj.key][1] / score(sj, cfg_i)
+                rows.append(f"portability,{kernel},{si.key},{sj.key},"
+                            f"{frac:.3f}")
+    return rows

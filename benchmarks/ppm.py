@@ -1,0 +1,49 @@
+"""Paper Tables 4/5: the performance-portability metric (PPM, Pennycook et
+al. — harmonic mean of the fraction-of-best across scenarios) for (a) the
+default config, (b) each single-scenario-tuned config, (c) Kernel Launcher's
+runtime selection (which by construction picks each scenario's best known
+config -> PPM = 1.0)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import get_kernel
+
+from .common import BENCH_SCENARIOS, best_config, score
+
+
+def _ppm(fractions: list[float]) -> float:
+    f = np.array(fractions)
+    return len(f) / (1.0 / f).sum()
+
+
+def run() -> list[str]:
+    rows = ["ppm,kernel,config_tuned_for,best,worst,ppm"]
+    for kernel in sorted({s.kernel for s in BENCH_SCENARIOS}):
+        scs = [s for s in BENCH_SCENARIOS if s.kernel == kernel]
+        opts = {s.key: best_config(s.key) for s in scs}
+
+        def fractions(cfg) -> list[float]:
+            return [opts[s.key][1] / score(s, cfg) for s in scs]
+
+        fr = fractions(get_kernel(kernel).default_config())
+        rows.append(f"ppm,{kernel},default,{max(fr):.2f},{min(fr):.2f},"
+                    f"{_ppm(fr):.2f}")
+        for s in scs:
+            fr = fractions(opts[s.key][0])
+            rows.append(f"ppm,{kernel},{s.key},{max(fr):.2f},"
+                        f"{min(fr):.2f},{_ppm(fr):.2f}")
+        # compile-time selection (Kernel Tuner headers, paper §3): one
+        # baked config per *device* (built for 256^3-f32), no runtime
+        # dispatch on problem size or dtype
+        baked = {dev: opts[next(s.key for s in scs
+                                if s.device == dev and s.grid[0] == 256
+                                and s.dtype == "float32")][0]
+                 for dev in {s.device for s in scs}}
+        fr = [opts[s.key][1] / score(s, baked[s.device]) for s in scs]
+        rows.append(f"ppm,{kernel},compile_time_per_device,"
+                    f"{max(fr):.2f},{min(fr):.2f},{_ppm(fr):.2f}")
+        # Kernel Launcher: per-scenario best -> all fractions 1.0
+        rows.append(f"ppm,{kernel},kernel_launcher,1.00,1.00,1.00")
+    return rows

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure. Prints CSV.
+
+  Table 3  -> capture_bench      (capture time/size scaling)
+  Fig 2    -> distribution       (search-space histograms, default & config-C)
+  Fig 3    -> tuning_session     (random vs Bayesian convergence)
+  Fig 4    -> portability        (cross-scenario optimum transfer matrix)
+  Tables 4/5 -> ppm              (performance-portability metric)
+  Fig 5    -> overhead           (first vs cached launch breakdown)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+MODULES = ("capture_bench", "distribution", "tuning_session",
+           "portability", "ppm", "overhead")
+
+
+def main() -> None:
+    want = sys.argv[1:] or MODULES
+    print("table,_fields...")
+    for name in want:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        for row in mod.run():
+            print(row)
+        print(f"# {name} finished in {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

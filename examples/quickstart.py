@@ -1,0 +1,65 @@
+"""Quickstart: the Kernel Launcher flow on the matmul kernel, end to end.
+
+  1. define/launch a tunable kernel (default config),
+  2. capture the launch (KERNEL_LAUNCHER_CAPTURE),
+  3. replay-tune it for this device,
+  4. relaunch: the wisdom-selected config now wins.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import tempfile
+
+import numpy as np
+
+os.environ.setdefault("KERNEL_LAUNCHER_CAPTURE", "matmul")
+
+from repro.core import WisdomKernel, get_kernel, list_captures  # noqa: E402
+from repro.tuner import CostModelEvaluator, tune_capture        # noqa: E402
+from repro.core import get_device                               # noqa: E402
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="kl-quickstart-")
+    os.environ["KERNEL_LAUNCHER_CAPTURE_DIR"] = f"{tmp}/captures"
+    os.environ["KERNEL_LAUNCHER_WISDOM_DIR"] = f"{tmp}/wisdom"
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((512, 1024)).astype(np.float32)
+    b = rng.standard_normal((1024, 512)).astype(np.float32)
+
+    builder = get_kernel("matmul")
+    kernel = WisdomKernel(builder, device_kind="tpu-v5e")
+
+    # 1+2: launch (runs + captures; reference path on CPU, Pallas on TPU)
+    c = kernel(a, b)
+    print(f"launch #1: tier={kernel.stats[-1].tier} "
+          f"config={kernel.stats[-1].config}")
+
+    # 3: replay the capture through the tuner (Bayesian, simulated v5e)
+    cap = list_captures()[0]
+    os.environ.pop("KERNEL_LAUNCHER_CAPTURE")
+    res = tune_capture(cap, "tpu-v5e", strategy="bayes", max_evals=80,
+                       time_budget_s=60)
+    print(f"tuned: best={res.best_score_us:.1f}us after "
+          f"{len(res.evaluations)} evals -> {res.best_config}")
+
+    # 4: relaunch — runtime selection now finds the tuned record
+    kernel.invalidate()
+    c2 = kernel(a, b)
+    st = kernel.stats[-1]
+    print(f"launch #2: tier={st.tier} config={st.config}")
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c2), rtol=1e-4,
+                               atol=1e-4)
+
+    ev = CostModelEvaluator(builder, (512, 512, 1024), "float32",
+                            get_device("tpu-v5e"), verify="none")
+    t_default = ev(builder.default_config()).score_us
+    t_tuned = ev(res.best_config).score_us
+    print(f"simulated v5e time: default={t_default:.1f}us "
+          f"tuned={t_tuned:.1f}us ({t_default / t_tuned:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Assigned-architecture registry: one module per architecture, each
+exporting ``CONFIG``. ``get_arch("deepseek-v2-236b")`` returns the full
+config; ``get_arch(name).reduced()`` the CPU smoke variant."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ArchConfig
+
+ARCH_MODULES: dict[str, str] = {
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen1_5_7b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "whisper-base": "repro.configs.whisper_base",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCH_MODULES)}")
+    return importlib.import_module(ARCH_MODULES[name]).CONFIG
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCH_MODULES)

@@ -1,0 +1,39 @@
+"""The paper's own application: MicroHH CFD kernel scenarios (§5).
+
+16 scenarios = {advec_u, diff_uvw} x {256^3, 512^3} x {float32, bfloat16}
+x {tpu-v5e, tpu-v4} — the TPU analogue of the paper's
+{advec_u, diff_uvw} x {256^3, 512^3} x {float, double} x {A4000, A100}.
+Benchmarks iterate this table to reproduce Figs 2-5 and Tables 3-5.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+KERNELS = ("advec_u", "diff_uvw")
+GRIDS = ((256, 256, 256), (512, 512, 512))
+DTYPES = ("float32", "bfloat16")     # paper: float / double
+DEVICES = ("tpu-v5e", "tpu-v4")      # paper: A4000 / A100
+
+# smaller grids for fast CI / smoke paths
+SMOKE_GRIDS = ((32, 32, 128), (64, 64, 128))
+
+
+@dataclass(frozen=True)
+class Scenario:
+    kernel: str
+    grid: tuple[int, int, int]
+    dtype: str
+    device: str
+
+    @property
+    def key(self) -> str:
+        g = self.grid[0]
+        return f"{self.kernel}-{g}^3-{self.dtype}-{self.device}"
+
+
+def scenarios(grids=GRIDS) -> list[Scenario]:
+    return [Scenario(k, g, p, d)
+            for k, g, p, d in itertools.product(KERNELS, grids, DTYPES,
+                                                DEVICES)]

@@ -1,0 +1,39 @@
+"""Kernel Launcher core — the paper's primary contribution, in JAX.
+
+Public API (mirrors the C++ library's surface, paper §4):
+
+    builder = KernelBuilder("vector_add")
+    builder.tune("block_size", [128, 256, 512])
+    @builder.problem_size
+    def _(c, a, b, n): ...
+    @builder.build
+    def _(config, problem, meta): ...   # -> pallas_call closure
+    kernel = WisdomKernel(builder)
+    out = kernel(c, a, b, n)            # capture/select/compile/launch
+"""
+
+from .builder import ArgsMeta, KernelBuilder, args_meta
+from .capture import (Capture, capture_dir, capture_requested, list_captures,
+                      load_capture, write_capture, CAPTURE_ENV)
+from .compile_cache import CompileCache, LaunchStats
+from .device import (DEVICES, DeviceSpec, current_device, current_device_kind,
+                     get_device, TPU_V4, TPU_V5E, DEVICE_ENV)
+from .param import Config, ConfigSpace, TunableParam
+from .registry import all_kernels, get_kernel, load_builtin_kernels, register
+from .wisdom import Wisdom, WisdomRecord, make_provenance, default_wisdom_dir
+from .wisdom_kernel import WisdomKernel, resolve_backend, BACKEND_ENV
+from .workload import Workload
+
+__all__ = [
+    "ArgsMeta", "KernelBuilder", "args_meta",
+    "Capture", "capture_dir", "capture_requested", "list_captures",
+    "load_capture", "write_capture", "CAPTURE_ENV",
+    "CompileCache", "LaunchStats",
+    "DEVICES", "DeviceSpec", "current_device", "current_device_kind",
+    "get_device", "TPU_V4", "TPU_V5E", "DEVICE_ENV",
+    "Config", "ConfigSpace", "TunableParam",
+    "all_kernels", "get_kernel", "load_builtin_kernels", "register",
+    "Wisdom", "WisdomRecord", "make_provenance", "default_wisdom_dir",
+    "WisdomKernel", "resolve_backend", "BACKEND_ENV",
+    "Workload",
+]

@@ -1,0 +1,127 @@
+"""KernelBuilder — tunable kernel definitions (paper §4.1, Listing 3).
+
+The builder consolidates, in one place in the host code:
+
+  * the configuration space (``tune`` / ``restriction``),
+  * the compilation specification (``build``: config + problem -> callable;
+    for Pallas kernels this constructs the ``pl.pallas_call`` with
+    config-derived BlockSpecs),
+  * the launch geometry (``problem_size``: derived from the kernel
+    arguments, not passed by the caller — paper §4.6),
+  * the reference oracle (``reference``) used for output verification,
+  * the hardware-demand model (``workload``) used by the analytical
+    objective on non-TPU hosts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .param import Config, ConfigSpace
+from .workload import Workload
+
+ArgsMeta = tuple  # tuple[jax.ShapeDtypeStruct, ...]
+
+
+def args_meta(*args) -> ArgsMeta:
+    """Abstract (shape, dtype) view of concrete or abstract arguments."""
+    out = []
+    for a in args:
+        if isinstance(a, jax.ShapeDtypeStruct):
+            out.append(a)
+        elif hasattr(a, "shape") and hasattr(a, "dtype"):
+            out.append(jax.ShapeDtypeStruct(a.shape, a.dtype))
+        else:  # python scalar
+            out.append(jax.ShapeDtypeStruct((), jnp.asarray(a).dtype))
+    return tuple(out)
+
+
+class KernelBuilder:
+    """Tunable kernel definition. See Listing 3 of the paper for the shape
+    of the API this mirrors."""
+
+    def __init__(self, name: str, source: str = "") -> None:
+        self.name = name
+        self.source = source            # human-readable origin (module path)
+        self.space = ConfigSpace()
+        self._build: Callable[[Config, tuple, ArgsMeta], Callable] | None = None
+        self._reference: Callable | None = None
+        self._problem_size: Callable[..., tuple[int, ...]] | None = None
+        self._workload: Callable[[Config, tuple, str], Workload] | None = None
+
+    # -- space construction (chainable, like the C++ API) --------------------
+
+    def tune(self, name: str, values: Sequence, default=None) -> "KernelBuilder":
+        self.space.tune(name, values, default)
+        return self
+
+    def restriction(self, expr) -> "KernelBuilder":
+        self.space.restrict(expr)
+        return self
+
+    # -- registration decorators ---------------------------------------------
+
+    def problem_size(self, fn: Callable[..., tuple[int, ...]]):
+        """fn(*args_meta) -> problem-size vector (paper §4.4: interpretation
+        is kernel-defined, e.g. (n, k, m) for matmul)."""
+        self._problem_size = fn
+        return fn
+
+    def build(self, fn: Callable[..., Callable]):
+        """fn(config, problem, meta, interpret=False) -> callable(*arrays).
+        The callable is what gets jitted+compiled at runtime (paper: NVRTC
+        compile); ``interpret=True`` must produce the Pallas interpret-mode
+        variant (CPU-executable kernel body)."""
+        self._build = fn
+        return fn
+
+    def reference(self, fn: Callable):
+        """Pure-jnp oracle; also the non-TPU execution path."""
+        self._reference = fn
+        return fn
+
+    def workload(self, fn: Callable[[Config, tuple, str], Workload]):
+        """fn(config, problem, dtype) -> Workload for the cost model."""
+        self._workload = fn
+        return fn
+
+    # -- accessors ------------------------------------------------------------
+
+    def get_problem_size(self, *args) -> tuple[int, ...]:
+        meta = args_meta(*args)
+        if self._problem_size is None:
+            # default: shape of the first argument
+            return tuple(int(d) for d in meta[0].shape)
+        return tuple(int(x) for x in self._problem_size(*meta))
+
+    def get_dtype(self, *args) -> str:
+        meta = args_meta(*args)
+        return str(jnp.dtype(meta[0].dtype).name)
+
+    def make(self, config: Config, meta: ArgsMeta,
+             interpret: bool = False) -> Callable:
+        if self._build is None:
+            raise ValueError(f"kernel {self.name!r} has no build fn")
+        self.space.check(config)
+        problem = self.get_problem_size(*meta)
+        return self._build(dict(config), problem, meta, interpret=interpret)
+
+    def make_reference(self) -> Callable:
+        if self._reference is None:
+            raise ValueError(f"kernel {self.name!r} has no reference fn")
+        return self._reference
+
+    def make_workload(self, config: Config, problem: tuple[int, ...],
+                      dtype: str) -> Workload:
+        if self._workload is None:
+            raise ValueError(f"kernel {self.name!r} has no workload fn")
+        return self._workload(dict(config), tuple(problem), dtype)
+
+    def default_config(self) -> Config:
+        return self.space.default_config()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"KernelBuilder({self.name!r}, space={self.space!r})"

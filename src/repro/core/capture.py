@@ -1,0 +1,116 @@
+"""Kernel-launch capture (paper §4.2).
+
+Setting ``KERNEL_LAUNCHER_CAPTURE`` to a comma-separated list of kernel names
+(or ``*``) makes :class:`~repro.core.wisdom_kernel.WisdomKernel` export, on
+launch, everything needed to *replay* that launch offline: the kernel name,
+problem size, dtype, argument arrays (real application data — the paper's key
+point: no synthetic input generation), and launch metadata.
+
+Captures are ``<name>-<problem>-<dtype>.capture.json`` + a sibling ``.npz``
+holding the arrays.
+"""
+
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+CAPTURE_ENV = "KERNEL_LAUNCHER_CAPTURE"
+CAPTURE_DIR_ENV = "KERNEL_LAUNCHER_CAPTURE_DIR"
+CAPTURE_VERSION = 1
+
+
+def capture_requested(kernel_name: str) -> bool:
+    spec = os.environ.get(CAPTURE_ENV, "")
+    if not spec:
+        return False
+    names = [s.strip() for s in spec.split(",") if s.strip()]
+    return "*" in names or kernel_name in names
+
+
+def capture_dir() -> Path:
+    return Path(os.environ.get(CAPTURE_DIR_ENV, Path.cwd() / "captures"))
+
+
+@dataclass
+class Capture:
+    kernel_name: str
+    problem_size: tuple[int, ...]
+    dtype: str
+    args: list[np.ndarray]
+    meta: dict[str, Any]
+    path: Path | None = None
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in self.args)
+
+
+def _slug(problem: tuple[int, ...], dtype: str) -> str:
+    return "x".join(str(p) for p in problem) + "-" + dtype
+
+
+def write_capture(kernel_name: str, problem_size: tuple[int, ...],
+                  dtype: str, args, out_dir: Path | str | None = None,
+                  extra_meta: dict | None = None) -> Path:
+    """Serialize one launch. Returns the json path. Timing of this function
+    is the paper's Table 3 'capture time'."""
+    t0 = time.perf_counter()
+    d = Path(out_dir) if out_dir is not None else capture_dir()
+    d.mkdir(parents=True, exist_ok=True)
+    arrays = [np.asarray(a) for a in args]
+    base = f"{kernel_name}-{_slug(problem_size, dtype)}"
+    npz_path = d / f"{base}.npz"
+    json_path = d / f"{base}.capture.json"
+    np.savez(npz_path, **{f"arg{i}": a for i, a in enumerate(arrays)})
+    meta = {
+        "version": CAPTURE_VERSION,
+        "kernel": kernel_name,
+        "problem_size": list(problem_size),
+        "dtype": dtype,
+        "num_args": len(arrays),
+        "arg_shapes": [list(a.shape) for a in arrays],
+        "arg_dtypes": [str(a.dtype) for a in arrays],
+        "nbytes": int(sum(a.nbytes for a in arrays)),
+        "npz": npz_path.name,
+        "captured_at": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+        "capture_seconds": None,   # filled below
+    }
+    meta.update(extra_meta or {})
+    meta["capture_seconds"] = time.perf_counter() - t0
+    tmp = json_path.with_suffix(".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=2)
+    os.replace(tmp, json_path)
+    return json_path
+
+
+def load_capture(json_path: Path | str) -> Capture:
+    json_path = Path(json_path)
+    with open(json_path) as f:
+        meta = json.load(f)
+    with np.load(json_path.parent / meta["npz"]) as z:
+        args = [z[f"arg{i}"] for i in range(meta["num_args"])]
+    return Capture(
+        kernel_name=meta["kernel"],
+        problem_size=tuple(int(x) for x in meta["problem_size"]),
+        dtype=meta["dtype"],
+        args=args,
+        meta=meta,
+        path=json_path,
+    )
+
+
+def list_captures(in_dir: Path | str | None = None) -> list[Path]:
+    d = Path(in_dir) if in_dir is not None else capture_dir()
+    if not d.exists():
+        return []
+    return sorted(d.glob("*.capture.json"))

@@ -1,0 +1,92 @@
+"""Device descriptors.
+
+The paper keys wisdom records by (GPU, architecture) — e.g. ("A100",
+"Ampere"). Our analogue is (device *kind*, device *family*). On real TPUs the
+kind comes from ``jax.devices()[0].device_kind``; on this CPU-only container
+the simulated device pair stands in for the paper's A4000/A100 pair, and the
+active kind can be forced with ``KERNEL_LAUNCHER_DEVICE``.
+
+The numeric fields feed the analytical cost model (tuner/costmodel.py).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+
+DEVICE_ENV = "KERNEL_LAUNCHER_DEVICE"
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    kind: str            # e.g. "tpu-v5e"
+    family: str          # e.g. "tpu-v5"
+    flops_bf16: float    # peak FLOP/s, bf16 on the MXU
+    flops_f32: float     # peak FLOP/s, f32
+    hbm_bw: float        # HBM bytes/s
+    vmem_bytes: int      # per-core VMEM capacity
+    ici_bw: float        # per-link interconnect bytes/s
+    program_overhead: float  # seconds of fixed overhead per grid program
+    num_cores: int = 1
+
+
+# Simulated pair (stands in for the paper's A4000 / A100, same-vendor,
+# different balance point). v5e numbers match the roofline constants in
+# EXPERIMENTS.md; v4 is the higher-bandwidth sibling.
+TPU_V5E = DeviceSpec(
+    kind="tpu-v5e", family="tpu-v5",
+    flops_bf16=197e12, flops_f32=98.5e12,
+    hbm_bw=819e9, vmem_bytes=16 * 2**20, ici_bw=50e9,
+    program_overhead=1.2e-6,
+)
+TPU_V4 = DeviceSpec(
+    kind="tpu-v4", family="tpu-v4",
+    flops_bf16=275e12, flops_f32=137.5e12,
+    hbm_bw=1228e9, vmem_bytes=32 * 2**20, ici_bw=100e9,
+    program_overhead=1.0e-6,
+)
+CPU_HOST = DeviceSpec(
+    kind="cpu", family="cpu",
+    flops_bf16=5e11, flops_f32=5e11,
+    hbm_bw=4e10, vmem_bytes=1 * 2**20, ici_bw=1e9,
+    program_overhead=1e-7,
+)
+
+DEVICES: dict[str, DeviceSpec] = {
+    d.kind: d for d in (TPU_V5E, TPU_V4, CPU_HOST)
+}
+
+
+def get_device(kind: str) -> DeviceSpec:
+    if kind in DEVICES:
+        return DEVICES[kind]
+    # Unknown real hardware: derive family from the kind string prefix.
+    family = "-".join(kind.split("-")[:2]) if "-" in kind else kind
+    return DeviceSpec(kind=kind, family=family,
+                      flops_bf16=TPU_V5E.flops_bf16,
+                      flops_f32=TPU_V5E.flops_f32,
+                      hbm_bw=TPU_V5E.hbm_bw, vmem_bytes=TPU_V5E.vmem_bytes,
+                      ici_bw=TPU_V5E.ici_bw,
+                      program_overhead=TPU_V5E.program_overhead)
+
+
+def current_device_kind() -> str:
+    """Active device kind: env override, else the real JAX device."""
+    env = os.environ.get(DEVICE_ENV)
+    if env:
+        return env
+    kind = jax.devices()[0].device_kind.lower()
+    if "tpu" in kind:
+        # e.g. "TPU v5 lite" -> "tpu-v5e"
+        if "v5" in kind and ("lite" in kind or "v5e" in kind):
+            return "tpu-v5e"
+        if "v4" in kind:
+            return "tpu-v4"
+        return kind.replace(" ", "-")
+    return "cpu"
+
+
+def current_device() -> DeviceSpec:
+    return get_device(current_device_kind())

@@ -1,0 +1,105 @@
+"""Compile-time kernel selection — the *baseline* the paper compares
+against (paper §3: Kernel Tuner's generated C headers).
+
+``export_header`` bakes the best known config per device into a static
+table (one "header" per kernel, JSON + a C-header-style rendering for
+fidelity); ``StaticKernel`` consumes the baked table the way a Make/CMake
+target would: the config is fixed at "build" time for one device, with **no
+problem-size dispatch and no fuzzy matching** — exactly the limitation the
+paper's runtime selection removes (recompile per GPU, one config per
+build). Benchmarked against WisdomKernel in §Paper/C3.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+from .builder import KernelBuilder, args_meta
+from .param import Config
+from .wisdom import Wisdom
+
+
+def export_header(kernel_name: str, device_kind: str,
+                  wisdom_dir: Path | str | None = None,
+                  out_dir: Path | str = "generated",
+                  reference_problem: tuple[int, ...] | None = None) -> Path:
+    """Bake the best config for (kernel, device) into a static header.
+
+    Mirrors Kernel Tuner's ``store_defaults``-style export: if multiple
+    problem sizes were tuned, the one closest to ``reference_problem``
+    (or the best-scoring record) wins — the compile-time approach cannot
+    dispatch on problem size at run time."""
+    wisdom = Wisdom.load(kernel_name, wisdom_dir)
+    recs = [r for r in wisdom.records if r.device_kind == device_kind]
+    if not recs:
+        raise FileNotFoundError(
+            f"no wisdom for {kernel_name!r} on {device_kind!r}; tune first")
+    if reference_problem is not None:
+        cfg, _ = wisdom.select(device_kind, reference_problem,
+                               recs[0].dtype, recs[0].config)
+    else:
+        cfg = min(recs, key=lambda r: r.score_us).config
+
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    doc = {"kernel": kernel_name, "device": device_kind, "config": cfg}
+    jpath = out / f"{kernel_name}-{device_kind}.header.json"
+    with open(jpath, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    # C-header rendering, for fidelity with the paper's workflow
+    hpath = out / f"{kernel_name}-{device_kind}.h"
+    guard = f"{kernel_name}_{device_kind}".upper().replace("-", "_")
+    lines = [f"#ifndef {guard}_H", f"#define {guard}_H", ""]
+    for k, v in sorted(cfg.items()):
+        macro = f"{kernel_name}_{k}".upper().replace("-", "_")
+        if isinstance(v, bool):
+            v = int(v)
+        if isinstance(v, str):
+            v = f'"{v}"'
+        lines.append(f"#define {macro} {v}")
+    lines += ["", "#endif", ""]
+    hpath.write_text("\n".join(lines))
+    return jpath
+
+
+def load_header(path: Path | str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+class StaticKernel:
+    """Compile-time-selected kernel: one fixed config per build/device.
+    No wisdom lookups, no per-problem dispatch — the paper's baseline."""
+
+    def __init__(self, builder: KernelBuilder, header_path: Path | str,
+                 backend: str | None = None):
+        import jax
+
+        self.builder = builder
+        doc = load_header(header_path)
+        if doc["kernel"] != builder.name:
+            raise ValueError(
+                f"header is for {doc['kernel']!r}, not {builder.name!r}")
+        self.config: Config = doc["config"]
+        self.device = doc["device"]
+        self._backend = backend
+        self._compiled: dict = {}
+
+    def __call__(self, *args):
+        import jax
+
+        from .wisdom_kernel import resolve_backend
+
+        backend = resolve_backend(self._backend)
+        meta = args_meta(*args)
+        if backend == "reference":
+            fn = self.builder.make_reference()
+        else:
+            fn = self.builder.make(self.config, meta,
+                                   interpret=backend == "interpret")
+        key = tuple((m.shape, str(m.dtype)) for m in meta)
+        if key not in self._compiled:
+            self._compiled[key] = jax.jit(fn).lower(*meta).compile()
+        return self._compiled[key](*args)

@@ -1,0 +1,199 @@
+"""Wisdom files (paper §4.4) and runtime selection heuristic (paper §4.5).
+
+A wisdom file is a human-readable JSON document per kernel holding one record
+per tuning session: the best configuration found for one (device, problem
+size, dtype) *scenario*, plus provenance. Re-tuning appends/refreshes records.
+
+Selection heuristic — the paper's §4.5 list, extended with dtype as a
+scenario component (our precision analogue of the paper's float/double):
+
+  1. record matching device kind AND problem size (preferring same dtype);
+  2. else, same device kind, problem size closest in Euclidean distance;
+  3. else, same device *family*, closest problem size;
+  4. else, any record, closest problem size;
+  5. else (empty/missing wisdom), the default configuration.
+"""
+
+from __future__ import annotations
+
+import datetime
+import getpass
+import json
+import math
+import os
+import platform
+import socket
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Any, Sequence
+
+import jax
+
+from .device import get_device
+
+WISDOM_VERSION = 1
+WISDOM_DIR_ENV = "KERNEL_LAUNCHER_WISDOM_DIR"
+
+
+def default_wisdom_dir() -> Path:
+    return Path(os.environ.get(WISDOM_DIR_ENV, Path.cwd() / "wisdom"))
+
+
+def make_provenance(strategy: str = "", evals: int = 0,
+                    objective: str = "") -> dict:
+    """Provenance block stored with each record (paper §4.4)."""
+    try:
+        user = getpass.getuser()
+    except Exception:  # pragma: no cover
+        user = "unknown"
+    return {
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "host": socket.gethostname(),
+        "user": user,
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "strategy": strategy,
+        "evaluations": evals,
+        "objective": objective,
+    }
+
+
+@dataclass
+class WisdomRecord:
+    device_kind: str
+    device_family: str
+    problem_size: tuple[int, ...]
+    dtype: str
+    config: dict[str, Any]
+    score_us: float                      # best objective value (lower=better)
+    provenance: dict = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d["problem_size"] = list(self.problem_size)
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "WisdomRecord":
+        return WisdomRecord(
+            device_kind=d["device_kind"],
+            device_family=d["device_family"],
+            problem_size=tuple(int(x) for x in d["problem_size"]),
+            dtype=d["dtype"],
+            config=dict(d["config"]),
+            score_us=float(d["score_us"]),
+            provenance=dict(d.get("provenance", {})),
+        )
+
+    def scenario(self) -> tuple:
+        return (self.device_kind, self.problem_size, self.dtype)
+
+
+def _distance(a: Sequence[int], b: Sequence[int]) -> float:
+    """Euclidean distance between problem sizes (zero-padded to equal rank)."""
+    n = max(len(a), len(b))
+    a = tuple(a) + (0,) * (n - len(a))
+    b = tuple(b) + (0,) * (n - len(b))
+    return math.sqrt(sum((x - y) ** 2 for x, y in zip(a, b)))
+
+
+class Wisdom:
+    """All tuning results for one kernel (one file per kernel, paper §4.4)."""
+
+    def __init__(self, kernel_name: str,
+                 records: list[WisdomRecord] | None = None):
+        self.kernel_name = kernel_name
+        self.records: list[WisdomRecord] = list(records or [])
+
+    # -- persistence ---------------------------------------------------------
+
+    @staticmethod
+    def path_for(kernel_name: str, wisdom_dir: Path | str | None = None) -> Path:
+        d = Path(wisdom_dir) if wisdom_dir is not None else default_wisdom_dir()
+        return d / f"{kernel_name}.wisdom.json"
+
+    @staticmethod
+    def load(kernel_name: str, wisdom_dir: Path | str | None = None) -> "Wisdom":
+        path = Wisdom.path_for(kernel_name, wisdom_dir)
+        if not path.exists():
+            return Wisdom(kernel_name)
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("kernel") != kernel_name:
+            raise ValueError(
+                f"wisdom file {path} is for kernel {doc.get('kernel')!r}, "
+                f"not {kernel_name!r}")
+        recs = [WisdomRecord.from_json(r) for r in doc.get("records", [])]
+        return Wisdom(kernel_name, recs)
+
+    def save(self, wisdom_dir: Path | str | None = None) -> Path:
+        path = Wisdom.path_for(self.kernel_name, wisdom_dir)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        doc = {
+            "kernel": self.kernel_name,
+            "version": WISDOM_VERSION,
+            "records": [r.to_json() for r in self.records],
+        }
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)  # atomic
+        return path
+
+    # -- mutation ------------------------------------------------------------
+
+    def add(self, record: WisdomRecord, keep_best: bool = True) -> None:
+        """Add a tuning result. If a record for the same scenario exists and
+        ``keep_best``, keep whichever scored better (re-tuning semantics)."""
+        if keep_best:
+            for i, r in enumerate(self.records):
+                if r.scenario() == record.scenario():
+                    if record.score_us < r.score_us:
+                        self.records[i] = record
+                    return
+        self.records.append(record)
+
+    # -- selection (paper §4.5) ----------------------------------------------
+
+    def select(self, device_kind: str, problem_size: Sequence[int],
+               dtype: str, default_config: dict) -> tuple[dict, str]:
+        """Pick a config for a scenario. Returns (config, match_tier)."""
+        problem = tuple(int(x) for x in problem_size)
+        family = get_device(device_kind).family
+
+        def best(cands: list[WisdomRecord]) -> WisdomRecord | None:
+            if not cands:
+                return None
+            return min(cands, key=lambda r: (_distance(r.problem_size, problem),
+                                             r.score_us))
+
+        tiers: list[tuple[str, list[WisdomRecord]]] = []
+        exact = [r for r in self.records
+                 if r.device_kind == device_kind
+                 and r.problem_size == problem and r.dtype == dtype]
+        tiers.append(("exact", exact))
+        same_dev = [r for r in self.records
+                    if r.device_kind == device_kind and r.dtype == dtype]
+        tiers.append(("device+dtype", same_dev))
+        same_dev_any = [r for r in self.records if r.device_kind == device_kind]
+        tiers.append(("device", same_dev_any))
+        fam = [r for r in self.records
+               if r.device_family == family and r.dtype == dtype]
+        tiers.append(("family+dtype", fam))
+        fam_any = [r for r in self.records if r.device_family == family]
+        tiers.append(("family", fam_any))
+        any_dtype = [r for r in self.records if r.dtype == dtype]
+        tiers.append(("any+dtype", any_dtype))
+        tiers.append(("any", list(self.records)))
+
+        for tier_name, cands in tiers:
+            rec = best(cands)
+            if rec is not None:
+                return dict(rec.config), tier_name
+        return dict(default_config), "default"
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Wisdom({self.kernel_name!r}, {len(self.records)} records)"

@@ -1,0 +1,145 @@
+"""WisdomKernel — runtime kernel selection + runtime compilation (paper §4.5).
+
+``WisdomKernel(builder)`` is the launchable object (paper Listing 3): calling
+it with kernel arguments (a) derives the problem size from the arguments,
+(b) optionally *captures* the launch, (c) selects the best known configuration
+from the wisdom file via the fuzzy-match heuristic, and (d) compiles the
+chosen configuration just-in-time, caching the executable for subsequent
+launches of the same scenario.
+
+Works both eagerly (concrete arrays: AOT-compiled executables, timing stats)
+and under an outer ``jax.jit`` trace (model integration: selection happens at
+trace time from static shapes, the built kernel is inlined).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from pathlib import Path
+from typing import Callable
+
+import jax
+import numpy as np
+
+from .builder import KernelBuilder, args_meta
+from .capture import capture_requested, write_capture
+from .compile_cache import CompileCache, LaunchStats
+from .device import current_device_kind
+from .param import Config
+from .wisdom import Wisdom
+
+BACKEND_ENV = "REPRO_KERNEL_BACKEND"
+_VALID_BACKENDS = ("auto", "pallas", "interpret", "reference")
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    b = backend or os.environ.get(BACKEND_ENV, "auto")
+    if b not in _VALID_BACKENDS:
+        raise ValueError(f"bad backend {b!r}; want one of {_VALID_BACKENDS}")
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "reference"
+    return b
+
+
+class WisdomKernel:
+    def __init__(self, builder: KernelBuilder,
+                 wisdom_dir: Path | str | None = None,
+                 device_kind: str | None = None,
+                 backend: str | None = None) -> None:
+        self.builder = builder
+        self.wisdom_dir = wisdom_dir
+        self._device_kind = device_kind
+        self._backend = backend
+        self._wisdom: Wisdom | None = None
+        self._wisdom_read_s = 0.0
+        self._selection_cache: dict[tuple, tuple[Config, str]] = {}
+        self.compile_cache = CompileCache()
+        self.stats: list[LaunchStats] = []
+
+    # -- pieces ---------------------------------------------------------------
+
+    @property
+    def device_kind(self) -> str:
+        return self._device_kind or current_device_kind()
+
+    def _load_wisdom(self) -> Wisdom:
+        if self._wisdom is None:
+            t0 = time.perf_counter()
+            self._wisdom = Wisdom.load(self.builder.name, self.wisdom_dir)
+            self._wisdom_read_s = time.perf_counter() - t0
+        return self._wisdom
+
+    def invalidate(self) -> None:
+        """Drop cached wisdom + selections (e.g. after re-tuning)."""
+        self._wisdom = None
+        self._selection_cache.clear()
+        self.compile_cache.clear()
+
+    def select_config(self, problem: tuple[int, ...], dtype: str
+                      ) -> tuple[Config, str]:
+        key = (self.device_kind, problem, dtype)
+        if key in self._selection_cache:
+            return self._selection_cache[key]
+        wisdom = self._load_wisdom()
+        cfg, tier = wisdom.select(self.device_kind, problem, dtype,
+                                  self.builder.default_config())
+        self._selection_cache[key] = (cfg, tier)
+        return cfg, tier
+
+    # -- launch ---------------------------------------------------------------
+
+    def __call__(self, *args, config: Config | None = None):
+        meta = args_meta(*args)
+        problem = self.builder.get_problem_size(*meta)
+        dtype = self.builder.get_dtype(*meta)
+        backend = resolve_backend(self._backend)
+
+        traced = any(isinstance(a, jax.core.Tracer) for a in args)
+        if not traced and capture_requested(self.builder.name):
+            write_capture(self.builder.name, problem, dtype, args,
+                          extra_meta={"device_kind": self.device_kind,
+                                      "source": self.builder.source})
+
+        t_sel0 = time.perf_counter()
+        if config is None:
+            config, tier = self.select_config(problem, dtype)
+        else:
+            tier = "forced"
+        select_s = time.perf_counter() - t_sel0
+
+        fn = self._instantiate(config, meta, backend)
+
+        if traced:
+            # Inside an outer trace: inline; the outer jit owns compilation.
+            return fn(*args)
+
+        key = (self.device_kind, backend, problem, dtype,
+               self.builder.space.freeze(config))
+
+        def _compile() -> Callable:
+            return jax.jit(fn).lower(*meta).compile()
+
+        compiled, compile_s, cached = self.compile_cache.get_or_compile(
+            key, _compile)
+        t0 = time.perf_counter()
+        out = compiled(*[np.asarray(a) if not hasattr(a, "dtype") else a
+                         for a in args])
+        out = jax.block_until_ready(out)
+        launch_s = time.perf_counter() - t0
+        self.stats.append(LaunchStats(
+            kernel=self.builder.name, cached=cached,
+            wisdom_read_s=0.0 if cached else self._wisdom_read_s,
+            select_s=select_s, compile_s=compile_s, launch_s=launch_s,
+            tier=tier, config=dict(config)))
+        return out
+
+    def _instantiate(self, config: Config, meta, backend: str) -> Callable:
+        if backend == "reference":
+            return self.builder.make_reference()
+        interpret = backend == "interpret"
+        return self.builder.make(config, meta, interpret=interpret)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"WisdomKernel({self.builder.name!r}, "
+                f"device={self.device_kind!r})")

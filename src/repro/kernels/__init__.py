@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots the paper tunes
+(advec_u, diff_uvw) and the LM-stack hot-spots this framework tunes the same
+way (flash attention, matmul). Each kernel is a KernelBuilder registered with
+the Kernel Launcher core; ``ops`` holds the public entry points, ``ref`` the
+pure-jnp oracles.
+"""
+
+from . import ops, ref  # noqa: F401
+
+__all__ = ["ops", "ref"]

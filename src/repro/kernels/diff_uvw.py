@@ -1,0 +1,174 @@
+"""diff_uvw — the paper's second MicroHH kernel (§5.2): Smagorinsky-style
+diffusion of (u, v, w) with a variable eddy viscosity, halo-1 stencil.
+
+Extra tunable vs advec_u: ``fuse_outputs`` — compute all three tendencies in
+one kernel (inputs read once) vs three single-output passes (lower VMEM
+pressure, 3x input traffic). This is the TPU-shaped analogue of the paper's
+observation that algorithmic variants belong in the search space.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import KernelBuilder, Workload, register
+
+from . import ref as _ref
+from ._stencil_common import (FieldView, HALO_BLK, check_blocks, field_specs,
+                              out_spec, stencil_grid, stencil_hbm_bytes,
+                              stencil_vmem_bytes)
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+
+builder = KernelBuilder("diff_uvw", source="repro.kernels.diff_uvw")
+builder.tune("block_z", (4, 8, 16, 32), default=16)
+builder.tune("block_y", (8, 16, 32, 64, 128, 256), default=32)
+builder.tune("traversal", ("zy", "yz"), default="zy")
+builder.tune("unroll_z", (1, 2, 4), default=1)
+builder.tune("fuse_outputs", (True, False), default=True)
+builder.tune("dim_semantics", ("arbitrary", "parallel"), default="arbitrary")
+builder.restriction("block_z % unroll_z == 0")
+
+
+@builder.problem_size
+def _problem(u, v, w, evisc, scal):
+    return tuple(int(d) for d in u.shape)
+
+
+def _axis_shifts(view: FieldView, rows):
+    return (lambda s: view.sx(s, rows), lambda s: view.sy(s, rows),
+            lambda s: view.sz(s, rows))
+
+
+def _fused_kernel(unroll_z, *refs):
+    (scal_ref,
+     u_refs, v_refs, w_refs, e_refs,
+     ut_ref, vt_ref, wt_ref) = (refs[0], refs[1:6], refs[6:11], refs[11:16],
+                                refs[16:21], refs[21], refs[22], refs[23])
+    dxi, dyi, dzi = scal_ref[0, 0], scal_ref[0, 1], scal_ref[0, 2]
+    views = [FieldView.from_refs(*rs) for rs in (u_refs, v_refs, w_refs,
+                                                 e_refs)]
+    fu, fv, fw, fe = views
+    bz = fu.bz
+    rows_per = bz // unroll_z
+    for c in range(unroll_z):
+        rows = slice(c * rows_per, (c + 1) * rows_per)
+        se = _axis_shifts(fe, rows)
+        for view, out in ((fu, ut_ref), (fv, vt_ref), (fw, wt_ref)):
+            sf = _axis_shifts(view, rows)
+            ft = _ref.diff_field(*sf, *se, dxi, dyi, dzi)
+            out[rows] = ft.astype(out.dtype)
+
+
+def _single_kernel(unroll_z, *refs):
+    (scal_ref, f_refs, e_refs, out_ref) = (refs[0], refs[1:6], refs[6:11],
+                                           refs[11])
+    dxi, dyi, dzi = scal_ref[0, 0], scal_ref[0, 1], scal_ref[0, 2]
+    ff = FieldView.from_refs(*f_refs)
+    fe = FieldView.from_refs(*e_refs)
+    bz = ff.bz
+    rows_per = bz // unroll_z
+    for c in range(unroll_z):
+        rows = slice(c * rows_per, (c + 1) * rows_per)
+        ft = _ref.diff_field(*_axis_shifts(ff, rows), *_axis_shifts(fe, rows),
+                             dxi, dyi, dzi)
+        out_ref[rows] = ft.astype(out_ref.dtype)
+
+
+def _compiler_kwargs(config, interpret):
+    if interpret or pltpu is None:
+        return {}
+    cp = getattr(pltpu, "CompilerParams",
+                 getattr(pltpu, "TPUCompilerParams", None))
+    if cp is None:
+        return {}
+    return {"compiler_params":
+            cp(dimension_semantics=(config["dim_semantics"],) * 2)}
+
+
+@builder.build
+def _build(config, problem, meta, interpret: bool = False):
+    nz, ny, nx = problem
+    bz, by = config["block_z"], config["block_y"]
+    if not check_blocks(problem, bz, by):
+        raise ValueError(f"blocks ({bz},{by}) do not tile problem {problem}")
+    grid, to_zy = stencil_grid(problem, bz, by, config["traversal"])
+    scal_spec = pl.BlockSpec((1, 4), lambda a, b: (0, 0))
+    fspecs = field_specs(problem, bz, by, to_zy)
+    ospec = out_spec(problem, bz, by, to_zy)
+    dtype = meta[0].dtype
+    oshape = jax.ShapeDtypeStruct((nz, ny, nx), dtype)
+    kwargs = _compiler_kwargs(config, interpret)
+
+    if config["fuse_outputs"]:
+        call = pl.pallas_call(
+            functools.partial(_fused_kernel, config["unroll_z"]),
+            grid=grid,
+            in_specs=[scal_spec] + fspecs * 4,
+            out_specs=[ospec] * 3,
+            out_shape=[oshape] * 3,
+            interpret=interpret, **kwargs)
+
+        def run(u, v, w, evisc, scal):
+            reps = lambda f: (f,) * 5  # noqa: E731
+            return tuple(call(scal, *reps(u), *reps(v), *reps(w),
+                              *reps(evisc)))
+
+        return run
+
+    call = pl.pallas_call(
+        functools.partial(_single_kernel, config["unroll_z"]),
+        grid=grid,
+        in_specs=[scal_spec] + fspecs * 2,
+        out_specs=ospec,
+        out_shape=oshape,
+        interpret=interpret, **kwargs)
+
+    def run(u, v, w, evisc, scal):
+        reps = lambda f: (f,) * 5  # noqa: E731
+        return tuple(call(scal, *reps(f), *reps(evisc))
+                     for f in (u, v, w))
+
+    return run
+
+
+builder.reference(_ref.diff_uvw_ref)
+
+
+@builder.workload
+def _workload(config, problem, dtype):
+    nz, ny, nx = problem
+    bz, by = config["block_z"], config["block_y"]
+    if not check_blocks(problem, bz, by):
+        return Workload(0, 0, 0, 0, valid=False)
+    b = 2 if dtype in ("bfloat16", "float16") else 4
+    pts = nz * ny * nx
+    flops = pts * _ref.DIFF_FLOPS_PER_POINT_PER_FIELD * 3
+    grid = (nz // bz) * (ny // by)
+    reuse = 0.92 if config["traversal"] == "zy" else 1.06
+    if config["dim_semantics"] == "parallel":
+        reuse *= 0.98
+    if config["fuse_outputs"]:
+        vmem = stencil_vmem_bytes(problem, bz, by, 4, 3, 4)
+        hbm = stencil_hbm_bytes(problem, bz, by, 4, 3, b)
+    else:
+        # three passes: each reads its field + evisc, writes one output
+        vmem = stencil_vmem_bytes(problem, bz, by, 2, 1, 4)
+        hbm = 3 * stencil_hbm_bytes(problem, bz, by, 2, 1, b)
+        grid *= 3
+    return Workload(
+        flops=flops, hbm_bytes=hbm, vmem_bytes=int(vmem), grid=grid,
+        mxu_tile=None, lane_extent=nx, sublane_extent=by,
+        unroll_ways=config["unroll_z"], reuse=reuse,
+        notes={"bz": bz, "by": by, "fused": config["fuse_outputs"]})
+
+
+register(builder)

@@ -1,0 +1,135 @@
+"""Blocked matmul with a tunable (block_m, block_n, block_k) tiling and grid
+order — the canonical MXU kernel, used by the quickstart example and as the
+simplest end-to-end demonstration of the Kernel Launcher flow.
+
+Accumulation in an f32 VMEM scratch across the (innermost, "arbitrary") k
+axis; the grid-order parameter is the TPU analogue of the paper's unravel
+permutation (it changes which operand streams and which stays resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import KernelBuilder, Workload, register
+
+from . import ref as _ref
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+
+builder = KernelBuilder("matmul", source="repro.kernels.matmul")
+builder.tune("block_m", (64, 128, 256, 512), default=128)
+builder.tune("block_n", (64, 128, 256, 512), default=128)
+builder.tune("block_k", (128, 256, 512, 1024), default=256)
+builder.tune("grid_order", ("mnk", "nmk"), default="mnk")
+builder.tune("dim_semantics", ("parallel", "arbitrary"), default="parallel")
+
+
+@builder.problem_size
+def _problem(a, b):
+    (m, k), (_, n) = a.shape, b.shape
+    return (m, n, k)
+
+
+def _mm_kernel(nk: int, a_ref, b_ref, o_ref, acc_ref):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kb == nk - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@builder.build
+def _build(config, problem, meta, interpret: bool = False):
+    m, n, k = problem
+    bm, bn, bk = config["block_m"], config["block_n"], config["block_k"]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"blocks ({bm},{bn},{bk}) do not tile {problem}")
+    gm, gn, gk = m // bm, n // bn, k // bk
+    if config["grid_order"] == "mnk":
+        grid = (gm, gn, gk)
+        ij = lambda p0, p1: (p0, p1)  # noqa: E731
+    else:
+        grid = (gn, gm, gk)
+        ij = lambda p0, p1: (p1, p0)  # noqa: E731
+
+    def a_map(p0, p1, p2):
+        i, _ = ij(p0, p1)
+        return (i, p2)
+
+    def b_map(p0, p1, p2):
+        _, j = ij(p0, p1)
+        return (p2, j)
+
+    def o_map(p0, p1, p2):
+        i, j = ij(p0, p1)
+        return (i, j)
+
+    kwargs = {}
+    if not interpret and pltpu is not None:
+        cp = getattr(pltpu, "CompilerParams",
+                     getattr(pltpu, "TPUCompilerParams", None))
+        if cp is not None:
+            sem = (config["dim_semantics"], config["dim_semantics"],
+                   "arbitrary")
+            kwargs["compiler_params"] = cp(dimension_semantics=sem)
+
+    dtype = meta[0].dtype
+    if pltpu is None:  # pragma: no cover
+        raise RuntimeError("pallas TPU backend unavailable")
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+
+    call = pl.pallas_call(
+        functools.partial(_mm_kernel, gk),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), a_map),
+                  pl.BlockSpec((bk, bn), b_map)],
+        out_specs=pl.BlockSpec((bm, bn), o_map),
+        out_shape=jax.ShapeDtypeStruct((m, n), dtype),
+        scratch_shapes=scratch,
+        interpret=interpret, **kwargs)
+
+    return call
+
+
+builder.reference(_ref.matmul_ref)
+
+
+@builder.workload
+def _workload(config, problem, dtype):
+    m, n, k = problem
+    bm = min(config["block_m"], m)
+    bn = min(config["block_n"], n)
+    bk = min(config["block_k"], k)
+    if m % bm or n % bn or k % bk:
+        return Workload(0, 0, 0, 0, valid=False)
+    b = 2 if dtype in ("bfloat16", "float16") else 4
+    grid = (m // bm) * (n // bn) * (k // bk)
+    # A re-read per n-block, B re-read per m-block, C written once.
+    hbm = m * k * b * (n // bn) + k * n * b * (m // bm) + m * n * b
+    vmem = (bm * bk + bk * bn) * b * 2 + bm * bn * 4 + bm * bn * b
+    return Workload(
+        flops=2.0 * m * n * k, hbm_bytes=float(hbm), vmem_bytes=int(vmem),
+        grid=grid, mxu_tile=(bm, bn, bk), lane_extent=bn,
+        sublane_extent=bm, unroll_ways=1,
+        reuse=1.0 if config["grid_order"] == "mnk" else 1.02,
+        notes={"bm": bm, "bn": bn, "bk": bk})
+
+
+register(builder)

@@ -1,0 +1,83 @@
+"""Public jit-friendly entry points for all kernels.
+
+Each op routes through a module-level :class:`WisdomKernel` — the runtime
+selection + compilation layer (paper §4.5). On TPU the Pallas kernel runs
+with the wisdom-selected configuration; on other hosts (or for feature
+combinations the Pallas kernel does not support) the ``ref.py`` oracle runs
+instead. Model code only ever calls these functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import WisdomKernel, resolve_backend
+
+from . import advec_u as _advec_mod
+from . import diff_uvw as _diff_mod
+from . import flash_attention as _fa_mod
+from . import matmul as _mm_mod
+from . import ref
+
+advec_u_kernel = WisdomKernel(_advec_mod.builder)
+diff_uvw_kernel = WisdomKernel(_diff_mod.builder)
+matmul_kernel = WisdomKernel(_mm_mod.builder)
+fa_causal_kernel = WisdomKernel(_fa_mod.causal_builder)
+fa_full_kernel = WisdomKernel(_fa_mod.full_builder)
+
+_ALL_KERNELS = (advec_u_kernel, diff_uvw_kernel, matmul_kernel,
+                fa_causal_kernel, fa_full_kernel)
+
+
+def reload_wisdom() -> None:
+    """Invalidate cached wisdom on all ops (after re-tuning)."""
+    for k in _ALL_KERNELS:
+        k.invalidate()
+
+
+def pack_scalars(dxi: float, dyi: float, dzi: float):
+    return jnp.asarray([[dxi, dyi, dzi, 0.0]], dtype=jnp.float32)
+
+
+def advec_u(u, v, w, dxi: float, dyi: float, dzi: float):
+    """Advection tendency of u (paper kernel 1)."""
+    return advec_u_kernel(u, v, w, pack_scalars(dxi, dyi, dzi))
+
+
+def diff_uvw(u, v, w, evisc, dxi: float, dyi: float, dzi: float):
+    """Diffusion tendencies (ut, vt, wt) (paper kernel 2)."""
+    return diff_uvw_kernel(u, v, w, evisc, pack_scalars(dxi, dyi, dzi))
+
+
+def matmul(a, b):
+    return matmul_kernel(a, b)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              softcap: float | None = None, scale: float | None = None,
+              kv_offset: int = 0):
+    """Multi-head attention, q: (B, Hq, Sq, D), k/v: (B, Hkv, Sk, D).
+
+    Routes to the Pallas flash kernel when the feature set and shapes allow;
+    otherwise the full-featured jnp oracle (always the case on CPU hosts).
+    """
+    B, Hq, Sq, D = q.shape
+    Sk = k.shape[2]
+    default_scale = scale is None or abs(scale - D ** -0.5) < 1e-12
+    flashable = (
+        resolve_backend() in ("pallas", "interpret")
+        and window is None and softcap is None and default_scale
+        and kv_offset == 0 and Sq == Sk
+        and Sq % 128 == 0 and D % 128 == 0
+    )
+    if not flashable:
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, scale=scale,
+                                 kv_offset=kv_offset)
+    Hkv = k.shape[1]
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+    kernel = fa_causal_kernel if causal else fa_full_kernel
+    of = kernel(qf, kf, vf)
+    return of.reshape(B, Hq, Sq, D)

@@ -1,0 +1,2 @@
+"""Launcher: production mesh, per-(arch, shape) input specs, sharding rules,
+multi-pod dry-run, train/serve drivers."""

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Everything below is ordinary imports.
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) cell on the production meshes and record the
+memory / cost / collective analysis that feeds EXPERIMENTS.md §Dry-run and
+§Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_arch, list_archs                    # noqa: E402
+from repro.launch import sharding as sh                           # noqa: E402
+from repro.launch.mesh import make_production_mesh                # noqa: E402
+from repro.launch.shapes import (SHAPES, cell_skip_reason,        # noqa: E402
+                                 input_specs, microbatches_for)
+from repro.models import build_model                              # noqa: E402
+from repro.optim import AdamW, cosine_schedule                    # noqa: E402
+from repro.roofline import roofline_report                        # noqa: E402
+from repro.roofline.hlo_parse import hlo_cost_analysis            # noqa: E402
+from repro.train import init_train_state, make_train_step        # noqa: E402
+
+DEFAULT_OUT = Path("experiments/dryrun")
+
+
+def _named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, verbose: bool = True):
+    """Build + lower + compile one cell. Returns the analysis record."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": skip}
+    model = build_model(cfg, remat=(shape.kind == "train"))
+    specs = input_specs(cfg, shape)
+    t0 = time.perf_counter()
+
+    if shape.kind == "train":
+        optimizer = AdamW(lr=cosine_schedule(3e-4, 100, 10_000))
+        state_shape = jax.eval_shape(
+            lambda rng: init_train_state(model, optimizer, rng),
+            jax.random.PRNGKey(0))
+        state_specs = sh.state_pspecs(state_shape, mesh, cfg)
+        batch_specs = sh.batch_pspecs(specs["batch"], mesh)
+        metrics_shape = jax.eval_shape(
+            lambda s, b: make_train_step(model, optimizer,
+                                         microbatches_for(arch, shape_name)
+                                         )(s, b)[1],
+            state_shape, specs["batch"])
+        metrics_specs = jax.tree.map(lambda _: P(), metrics_shape)
+        step = make_train_step(model, optimizer,
+                               microbatches_for(arch, shape_name))
+        jitted = jax.jit(step,
+                         in_shardings=(_named(state_specs, mesh),
+                                       _named(batch_specs, mesh)),
+                         out_shardings=(_named(state_specs, mesh),
+                                        _named(metrics_specs, mesh)),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state_shape, specs["batch"])
+    elif shape.kind == "prefill":
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pspec = sh.param_pspecs(params_shape, mesh, cfg, serve=True)
+        cspec = sh.cache_pspecs(specs["cache"], mesh)
+        tspec = sh.batch_pspecs({"t": specs["tokens"]}, mesh)["t"]
+        extra_keys = [k for k in ("img", "frames") if k in specs]
+        extras = {k: specs[k] for k in extra_keys}
+        espec = sh.batch_pspecs(extras, mesh)
+
+        def prefill_step(params, tokens, cache, extras):
+            if cfg.enc_dec:
+                return model.prefill(params, tokens, cache,
+                                     extras["frames"])
+            if cfg.cross_attn_period:
+                return model.prefill(params, tokens, cache, extras["img"])
+            return model.prefill(params, tokens, cache)
+
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(_named(pspec, mesh), _named(tspec, mesh),
+                          _named(cspec, mesh), _named(espec, mesh)),
+            out_shardings=(_named(sh.logits_pspec(
+                mesh, shape.global_batch, cfg.padded_vocab), mesh),
+                           _named(cspec, mesh)),
+            donate_argnums=(2,))
+        lowered = jitted.lower(params_shape, specs["tokens"],
+                               specs["cache"], extras)
+    else:  # decode
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pspec = sh.param_pspecs(params_shape, mesh, cfg, serve=True)
+        cspec = sh.cache_pspecs(specs["cache"], mesh)
+        tspec = sh.batch_pspecs({"t": specs["tokens"]}, mesh)["t"]
+
+        def serve_step(params, cache, tokens):
+            return model.decode_step(params, cache, tokens)
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(_named(pspec, mesh), _named(cspec, mesh),
+                          _named(tspec, mesh)),
+            out_shardings=(_named(sh.logits_pspec(
+                mesh, shape.global_batch, cfg.padded_vocab), mesh),
+                           _named(cspec, mesh)),
+            donate_argnums=(1,))
+        lowered = jitted.lower(params_shape, specs["cache"],
+                               specs["tokens"])
+
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception:  # pragma: no cover
+        mem_info = {}
+
+    hlo = compiled.as_text()
+    # Trip-count-aware walk: XLA's cost_analysis counts while bodies once,
+    # under-reporting scan-over-layers programs by ~L x (see roofline/).
+    walk = hlo_cost_analysis(hlo)
+    coll = walk["collectives"]
+    import math
+    chips = int(math.prod(mesh.shape.values()))
+
+    flops = float(walk["flops"])
+    byts = float(walk["bytes"])
+    roof = roofline_report(
+        flops_per_chip=flops, bytes_per_chip=byts,
+        collective_per_chip=coll, chips=chips, cfg=cfg, kind=shape.kind,
+        global_batch=shape.global_batch, seq=shape.seq,
+        dtype=cfg.compute_dtype)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": dict(mesh.shape), "chips": chips,
+        "kind": shape.kind,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "lower_s": t_lower, "compile_s": t_compile,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "hlo_walk": {"flops": walk["flops"], "bytes_fused": walk["bytes"],
+                     "bytes_upper": walk["bytes_upper"]},
+        "memory_analysis": mem_info,
+        "collective_bytes": coll,
+        "roofline": roof,
+        "hlo_lines": hlo.count("\n"),
+    }
+    if verbose:
+        ms = mem_info.get("temp_bytes")
+        print(f"  lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"flops/chip={flops:.3e} bytes/chip={byts:.3e} "
+              f"coll/chip={coll['total']:.3e} "
+              f"temp={ms/2**30 if ms else float('nan'):.2f}GiB "
+              f"dominant={roof['dominant']} "
+              f"roofline={roof['roofline_fraction']:.3f}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_tag = "multipod" if args.multi_pod else "singlepod"
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells = ([(args.arch, args.shape)] if args.arch and args.shape
+             else [(a, s) for a in (list_archs() if args.all or not args.arch
+                                    else [args.arch])
+                   for s in (list(SHAPES) if args.all or not args.shape
+                             else [args.shape])])
+    failures = 0
+    for arch, shape in cells:
+        print(f"[dryrun] {arch} x {shape} on {mesh_tag} "
+              f"{tuple(mesh.shape.values())}")
+        try:
+            with mesh:
+                rec = lower_cell(arch, shape, mesh)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        rec["mesh_tag"] = mesh_tag
+        path = out_dir / f"{arch}--{shape}--{mesh_tag}.json"
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+        if rec["status"] == "skipped":
+            print(f"  SKIP: {rec['reason']}")
+    print(f"[dryrun] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

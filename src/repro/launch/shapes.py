@@ -1,0 +1,113 @@
+"""Assigned input shapes x architectures: the 40-cell matrix.
+
+``train_*`` lowers ``train_step``; ``prefill_*`` lowers the parallel prefill;
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a
+seq_len KV cache). ``long_500k`` is skipped for pure full-attention archs
+(quadratic) per the assignment — the skip table lives here and is surfaced
+in DESIGN.md / EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, list_archs
+from repro.models import build_model
+from repro.models.config import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> str | None:
+    """None if the (arch, shape) cell runs; else the documented skip."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention architecture: 500k decode is quadratic "
+                "(see DESIGN.md §5)")
+    return None
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in list_archs() for s in SHAPES]
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a, s in all_cells()
+            if cell_skip_reason(get_arch(a), SHAPES[s]) is None]
+
+
+# Per-(arch, shape) microbatch counts for gradient accumulation, sized so the
+# per-chip activation footprint fits v5e HBM (validated by the dry-run's
+# memory_analysis; see EXPERIMENTS.md §Dry-run).
+MICROBATCHES: dict[tuple[str, str], int] = {
+    ("deepseek-v2-236b", "train_4k"): 16,
+    ("llama-3.2-vision-11b", "train_4k"): 8,
+    ("codeqwen1.5-7b", "train_4k"): 8,
+    ("rwkv6-7b", "train_4k"): 8,
+    ("deepseek-moe-16b", "train_4k"): 4,
+    ("hymba-1.5b", "train_4k"): 4,
+    ("gemma2-2b", "train_4k"): 4,
+    ("h2o-danube-1.8b", "train_4k"): 4,
+    ("stablelm-1.6b", "train_4k"): 4,
+    ("whisper-base", "train_4k"): 2,
+}
+
+
+def microbatches_for(arch: str, shape: str) -> int:
+    return MICROBATCHES.get((arch, shape), 1)
+
+
+def _token_dtype():
+    return jnp.int32
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+    No device allocation — suitable for .lower()."""
+    B, S = shape.global_batch, shape.seq
+    f = jnp.dtype(cfg.compute_dtype)
+    i = _token_dtype()
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), i), "labels": sds((B, S), i)}
+        if cfg.cross_attn_period:
+            batch["img"] = sds((B, cfg.n_img_tokens, cfg.d_model), f)
+        if cfg.enc_dec:
+            batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), f)
+        return {"batch": batch}
+
+    model = build_model(cfg)
+    if shape.kind == "prefill":
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+        out = {"tokens": sds((B, S), i), "cache": cache}
+        if cfg.cross_attn_period:
+            out["img"] = sds((B, cfg.n_img_tokens, cfg.d_model), f)
+        if cfg.enc_dec:
+            out["frames"] = sds((B, cfg.enc_seq, cfg.d_model), f)
+        return out
+
+    # decode: one new token against a cache of length seq
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {"tokens": sds((B, 1), i), "cache": cache}
+
+
+def params_shape(cfg: ArchConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

@@ -1,0 +1,16 @@
+"""Model zoo: a composable decoder LM + enc-dec stack covering all assigned
+architectures. ``build_model(cfg)`` returns the right stack for a config."""
+
+from .config import (ArchConfig, FULL_WINDOW, MLACfg, MambaCfg, MoECfg,
+                     RWKVCfg)
+from .encdec import EncDecLM
+from .transformer import DecoderLM
+
+
+def build_model(cfg: ArchConfig, remat: bool = False):
+    return EncDecLM(cfg, remat=remat) if cfg.enc_dec \
+        else DecoderLM(cfg, remat=remat)
+
+
+__all__ = ["ArchConfig", "FULL_WINDOW", "MLACfg", "MambaCfg", "MoECfg",
+           "RWKVCfg", "DecoderLM", "EncDecLM", "build_model"]

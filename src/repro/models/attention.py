@@ -1,0 +1,205 @@
+"""GQA attention block: train/prefill forward + cached decode step.
+
+Supports per-layer sliding windows *as data* (window scalar array; 0 = full
+attention) so heterogeneous stacks (gemma2 alternating, hymba's 3 global
+layers) run under one scanned layer body. Softcap per config. The underlying
+attention math routes through ``repro.kernels.ops.attention`` (Pallas flash
+kernel on TPU, oracle elsewhere).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops, ref as kref
+
+from .common import (KeyGen, apply_rope, constrain_batch,
+                     dense_init, dt, zeros)
+from .config import ArchConfig
+
+
+def init_attn(keys: KeyGen, cfg: ArchConfig,
+              stack: tuple[int, ...] = ()) -> dict:
+    dtype = dt(cfg)
+    d = cfg.d_model
+    p = {
+        "wq": dense_init(keys(), (*stack, d, cfg.d_q), dtype),
+        "wk": dense_init(keys(), (*stack, d, cfg.d_kv), dtype),
+        "wv": dense_init(keys(), (*stack, d, cfg.d_kv), dtype),
+        "wo": dense_init(keys(), (*stack, cfg.d_q, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((*stack, cfg.d_q), dtype)
+        p["bk"] = zeros((*stack, cfg.d_kv), dtype)
+        p["bv"] = zeros((*stack, cfg.d_kv), dtype)
+    return p
+
+
+def _qkv(cfg: ArchConfig, p: dict, x: jax.Array,
+         positions: jax.Array, rope: bool = True):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = constrain_batch(q.reshape(B, S, cfg.n_heads, cfg.d_head),
+                        head_dim=2)
+    k = constrain_batch(k.reshape(B, S, cfg.n_kv_heads, cfg.d_head),
+                        head_dim=2)
+    v = constrain_batch(v.reshape(B, S, cfg.n_kv_heads, cfg.d_head),
+                        head_dim=2)
+    if rope and cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_frac, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_frac, cfg.rope_theta)
+    # -> (B, H, S, D)
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+def _attn_core(cfg: ArchConfig, p: dict, x: jax.Array, window,
+               causal: bool):
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = _qkv(cfg, p, x, positions)
+    static_window = isinstance(window, int) or window is None
+    if static_window:
+        win = None if not window else int(window)
+        o = ops.attention(q, k, v, causal=causal, window=win,
+                          softcap=cfg.attn_softcap)
+    else:
+        o = _masked_attention(q, k, v, window, causal, cfg.attn_softcap)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.d_q)
+    out = constrain_batch(
+        jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype)))
+    return out, k, v
+
+
+def attn_forward(cfg: ArchConfig, p: dict, x: jax.Array,
+                 window: jax.Array | int | None = None,
+                 causal: bool = True) -> jax.Array:
+    """Full-sequence attention (training). ``window`` may be a traced
+    scalar (0 = full); traced windows always use the masked oracle."""
+    return _attn_core(cfg, p, x, window, causal)[0]
+
+
+def attn_prefill(cfg: ArchConfig, p: dict, x: jax.Array, cache_k, cache_v,
+                 window: jax.Array | int | None = None
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Parallel prefill: forward + write K/V for positions [0, S) into the
+    cache. Returns (out, new_cache_k, new_cache_v)."""
+    out, k, v = _attn_core(cfg, p, x, window, causal=True)
+    cache_k = lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), 0, axis=2)
+    cache_v = lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), 0, axis=2)
+    return out, cache_k, cache_v
+
+
+def _masked_attention(q, k, v, window, causal: bool,
+                      softcap: float | None) -> jax.Array:
+    """Oracle attention with a *traced* window scalar (0 = full attn);
+    dispatches through the blockwise path for long sequences."""
+    return kref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+
+
+# --------------------------------------------------------------- decode ----
+
+def init_kv_cache(cfg: ArchConfig, n_layers: int, batch: int, max_seq: int,
+                  dtype) -> dict:
+    shape = (n_layers, batch, cfg.n_kv_heads, max_seq, cfg.d_head)
+    return {"k": zeros(shape, dtype), "v": zeros(shape, dtype)}
+
+
+def attn_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache_k: jax.Array,
+                cache_v: jax.Array, pos: jax.Array,
+                window: jax.Array | int | None = None
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, D); cache_k/v: (B, Hkv, S, D);
+    pos: scalar — index where the new token is written.
+    Returns (out, new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    positions = jnp.full((1,), pos)
+    q, k, v = _qkv(cfg, p, x, positions)
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                              pos, axis=2)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                              pos, axis=2)
+    S = cache_k.shape[2]
+    win = window if window is not None else 0
+    o = _decode_attention(q, cache_k, cache_v, pos, win, cfg.attn_softcap)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.d_q)
+    out = jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+def _decode_attention(q, cache_k, cache_v, pos, window,
+                      softcap: float | None) -> jax.Array:
+    """q: (B, Hq, 1, D) vs full cache; masks unwritten and out-of-window
+    positions. ``window`` may be traced (0 = unlimited).
+
+    The cache stays in its storage dtype — an ``astype(f32)`` here gets
+    hoisted by the compiler into a full f32 copy of the *whole stacked
+    cache* (2x the serving HBM); f32 accumulation comes from
+    ``preferred_element_type`` instead (EXPERIMENTS.md §Perf)."""
+    B, Hq, _, D = q.shape
+    Hkv = cache_k.shape[1]
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, D).astype(cache_k.dtype)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, cache_k,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(cache_k.shape[2])
+    valid = k_pos <= pos
+    valid &= jnp.where(window > 0, (pos - k_pos) < window, True)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(cache_v.dtype), cache_v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+# ----------------------------------------------------------- cross-attn ----
+
+def init_cross_attn(keys: KeyGen, cfg: ArchConfig,
+                    stack: tuple[int, ...] = ()) -> dict:
+    dtype = dt(cfg)
+    d = cfg.d_model
+    return {
+        "wq": dense_init(keys(), (*stack, d, cfg.d_q), dtype),
+        "wk": dense_init(keys(), (*stack, d, cfg.d_kv), dtype),
+        "wv": dense_init(keys(), (*stack, d, cfg.d_kv), dtype),
+        "wo": dense_init(keys(), (*stack, cfg.d_q, d), dtype),
+        "gate": zeros((*stack,), jnp.float32),   # mllama tanh gate
+    }
+
+
+def cross_kv(cfg: ArchConfig, p: dict, memory: jax.Array):
+    """Precompute cross-attention K/V from encoder/image memory (B, M, D)."""
+    B, M, _ = memory.shape
+    k = jnp.einsum("bmd,de->bme", memory, p["wk"].astype(memory.dtype))
+    v = jnp.einsum("bmd,de->bme", memory, p["wv"].astype(memory.dtype))
+    k = k.reshape(B, M, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    v = v.reshape(B, M, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def cross_attn_forward(cfg: ArchConfig, p: dict, x: jax.Array,
+                       k: jax.Array, v: jax.Array,
+                       gated: bool = True) -> jax.Array:
+    """x: (B, S, D) queries; k/v: (B, Hkv, M, D) precomputed memory."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype))
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    o = kref.attention_ref(q, k, v, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.d_q)
+    out = jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+    if gated:
+        out = out * jnp.tanh(p["gate"]).astype(out.dtype)
+    return out

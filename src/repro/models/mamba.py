@@ -1,0 +1,181 @@
+"""Selective SSM (Mamba) mixer — used by hymba's parallel attn+mamba heads.
+
+Training runs the selective scan over the sequence with ``lax.scan`` (state
+(B, d_inner, d_state) carried); decode is a single recurrence step with the
+state held in the serve cache. The short causal depthwise conv is expressed
+as a sum of shifted views (no conv primitive needed).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import KeyGen, dense_init, dt, zeros
+from .config import ArchConfig
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.mamba.expand * cfg.d_model
+
+
+def init_mamba(keys: KeyGen, cfg: ArchConfig,
+               stack: tuple[int, ...] = ()) -> dict:
+    m = cfg.mamba
+    d, di = cfg.d_model, d_inner(cfg)
+    dtype = dt(cfg)
+    return {
+        "w_in": dense_init(keys(), (*stack, d, 2 * di), dtype),
+        "conv_w": dense_init(keys(), (*stack, m.d_conv, di), dtype,
+                             in_axis=-2),
+        "w_bcdt": dense_init(keys(), (*stack, di, 2 * m.d_state + 1), dtype),
+        "dt_bias": zeros((*stack, di), jnp.float32),
+        "A_log": zeros((*stack, di, m.d_state), jnp.float32),
+        "D_skip": jnp.ones((*stack, di), jnp.float32),
+        "w_out": dense_init(keys(), (*stack, di, d), dtype),
+    }
+
+
+def _split_xz(cfg, p, x):
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    di = d_inner(cfg)
+    return xz[..., :di], xz[..., di:]
+
+
+def _conv(p, xp, prev_window=None):
+    """Causal depthwise conv along seq; xp: (B, S, di).
+    prev_window: (B, d_conv-1, di) trailing context for decode."""
+    w = p["conv_w"].astype(xp.dtype)                  # (d_conv, di)
+    d_conv = w.shape[0]
+    if prev_window is not None:
+        xp_full = jnp.concatenate([prev_window.astype(xp.dtype), xp], axis=1)
+    else:
+        xp_full = jnp.pad(xp, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    S = xp.shape[1]
+    out = sum(xp_full[:, i:i + S, :] * w[d_conv - 1 - i]
+              for i in range(d_conv))
+    return jax.nn.silu(out)
+
+
+def _ssm_inputs(cfg, p, xc):
+    m = cfg.mamba
+    bcdt = jnp.einsum("bse,ec->bsc", xc, p["w_bcdt"].astype(xc.dtype))
+    # note: B/C here are per-token, shared across channels (standard mamba
+    # uses x->B,C of size d_state from d_inner)
+    B_t = bcdt[..., :m.d_state].astype(jnp.float32)          # (B,S,N)
+    C_t = bcdt[..., m.d_state:2 * m.d_state].astype(jnp.float32)
+    dt_t = bcdt[..., -1:].astype(jnp.float32)                # (B,S,1) logits
+    return B_t, C_t, dt_t
+
+
+def mamba_forward(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    return _mamba_core(cfg, p, x)[0]
+
+
+def mamba_prefill(cfg: ArchConfig, p: dict, x: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Parallel prefill. Returns (out, final ssm state, conv window)."""
+    return _mamba_core(cfg, p, x)
+
+
+MAMBA_CHUNK = 128   # parallel (associative-scan) span; sequential across
+
+
+def _chunked_selective_scan(xc32, B_t, C_t, dt_ch, A, d_state: int):
+    """Selective scan h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t^T,
+    y_t = h_t C_t — chunked: ``lax.associative_scan`` inside chunks of
+    MAMBA_CHUNK (one big vectorized op instead of an S-trip while loop),
+    sequential carry across chunks, remat per chunk. This is the
+    TPU-friendly form: S/128 loop trips instead of S, and backward saves
+    only chunk-boundary states (see EXPERIMENTS.md §Perf, hymba cell).
+    """
+    Bb, S, di = xc32.shape
+    q = MAMBA_CHUNK if S >= MAMBA_CHUNK else S
+    while S % q:
+        q //= 2
+    nc = S // q
+
+    def resh(a):  # (B, S, ...) -> (nc, B, q, ...)
+        return jnp.moveaxis(a.reshape(Bb, nc, q, *a.shape[2:]), 1, 0)
+
+    xs = (resh(xc32), resh(B_t), resh(C_t), resh(dt_ch))
+
+    @jax.checkpoint
+    def chunk(h0, inp):
+        xq, bq, cq, dtq = inp                      # (B,q,di),(B,q,N),...
+        a = jnp.exp(dtq[..., None] * A[None, None])        # (B,q,di,N)
+        b = (dtq * xq)[..., None] * bq[:, :, None, :]      # (B,q,di,N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        a_cum, b_cum = lax.associative_scan(combine, (a, b), axis=1)
+        h = a_cum * h0[:, None] + b_cum                    # (B,q,di,N)
+        y = jnp.einsum("bqdn,bqn->bqd", h, cq)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((Bb, di, d_state), jnp.float32)
+    h_final, ys = lax.scan(chunk, h0, xs)          # ys: (nc, B, q, di)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, di)
+    return y, h_final
+
+
+def _mamba_core(cfg: ArchConfig, p: dict, x: jax.Array):
+    m = cfg.mamba
+    Bb, S, D = x.shape
+    di = d_inner(cfg)
+    xp, z = _split_xz(cfg, p, x)
+    xc = _conv(p, xp)                                        # (B, S, di)
+    B_t, C_t, dt_t = _ssm_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (di, N)
+    # per-channel dt via learned bias: (B, S, di)
+    dt_ch = jax.nn.softplus(
+        dt_t + p["dt_bias"].astype(jnp.float32)[None, None, :])
+
+    y, h_final = _chunked_selective_scan(
+        xc.astype(jnp.float32), B_t, C_t, dt_ch, A, m.d_state)
+    y = y + xc.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    conv_win = xp[:, S - (m.d_conv - 1):, :]                 # (B, dc-1, di)
+    return out, h_final, conv_win
+
+
+# --------------------------------------------------------------- decode ----
+
+def init_mamba_cache(cfg: ArchConfig, n_layers: int, batch: int,
+                     dtype) -> dict:
+    m = cfg.mamba
+    di = cfg.mamba.expand * cfg.d_model
+    return {
+        "ssm": jnp.zeros((n_layers, batch, di, m.d_state), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, m.d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(cfg: ArchConfig, p: dict, x: jax.Array, ssm_state, conv_win
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One token. x: (B, 1, D); ssm_state: (B, di, N);
+    conv_win: (B, d_conv-1, di)."""
+    m = cfg.mamba
+    xp, z = _split_xz(cfg, p, x)                             # (B,1,di)
+    xc = _conv(p, xp, prev_window=conv_win)                  # (B,1,di)
+    new_win = jnp.concatenate([conv_win[:, 1:], xp.astype(conv_win.dtype)],
+                              axis=1)
+    B_t, C_t, dt_t = _ssm_inputs(cfg, p, xc)
+    dt_ch = jax.nn.softplus(
+        dt_t + p["dt_bias"].astype(jnp.float32)[None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xt = xc[:, 0].astype(jnp.float32)
+    bt, ct, dtt = B_t[:, 0], C_t[:, 0], dt_ch[:, 0]
+    decay = jnp.exp(dtt[..., None] * A[None])
+    h = decay * ssm_state + (dtt * xt)[..., None] * bt[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, ct)[:, None, :]          # (B,1,di)
+    y = y + xc.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return out, h, new_win

@@ -1,0 +1,165 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — train forward + *absorbed*
+decode.
+
+Train/prefill expands the latent kv to per-head K/V (compute-friendly, remat
+under scan). Decode uses the absorbed formulation: queries are projected into
+the kv-latent space, so attention runs against the cached (S, kv_lora) latent
+plus the shared (S, d_rope) rope key — the cache never expands to per-head
+K/V. That is the memory trick that makes the 32k/128-batch decode cell fit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import (KeyGen, apply_rope, constrain_batch,
+                     dense_init, dt, init_norm, apply_norm)
+from .config import ArchConfig
+
+
+def init_mla(keys: KeyGen, cfg: ArchConfig,
+             stack: tuple[int, ...] = ()) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dtype = dt(cfg)
+    return {
+        "wq_a": dense_init(keys(), (*stack, d, m.q_lora), dtype),
+        "q_norm": {"scale": jnp.ones((*stack, m.q_lora), jnp.float32)},
+        "wq_b": dense_init(keys(), (*stack, m.q_lora,
+                                    h * (m.d_nope + m.d_rope)), dtype),
+        "wkv_a": dense_init(keys(), (*stack, d, m.kv_lora + m.d_rope), dtype),
+        "kv_norm": {"scale": jnp.ones((*stack, m.kv_lora), jnp.float32)},
+        "wk_b": dense_init(keys(), (*stack, m.kv_lora, h * m.d_nope), dtype),
+        "wv_b": dense_init(keys(), (*stack, m.kv_lora, h * m.d_v), dtype),
+        "wo": dense_init(keys(), (*stack, h * m.d_v, d), dtype),
+    }
+
+
+def _rms(x, scale):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + 1e-6) * scale).astype(x.dtype)
+
+
+def _queries(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    cq = _rms(jnp.einsum("bsd,dq->bsq", x, p["wq_a"].astype(x.dtype)),
+              p["q_norm"]["scale"])
+    q = jnp.einsum("bsq,qe->bse", cq, p["wq_b"].astype(x.dtype))
+    q = constrain_batch(q.reshape(B, S, h, m.d_nope + m.d_rope),
+                        head_dim=2)
+    q_nope, q_pe = q[..., :m.d_nope], q[..., m.d_nope:]
+    q_pe = apply_rope(q_pe, positions, 1.0, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _latents(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dq->bsq", x, p["wkv_a"].astype(x.dtype))
+    c_kv = _rms(kv[..., :m.kv_lora], p["kv_norm"]["scale"])
+    k_pe = apply_rope(kv[..., m.kv_lora:], positions, 1.0, cfg.rope_theta)
+    return c_kv, k_pe           # (B, S, kv_lora), (B, S, d_rope)
+
+
+def _mla_core(cfg: ArchConfig, p: dict, x: jax.Array):
+    from repro.kernels import ref as kref
+
+    m = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    positions = jnp.arange(S)
+    q_nope, q_pe = _queries(cfg, p, x, positions)     # (B,S,h,*)
+    c_kv, k_pe = _latents(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsq,qe->bse", c_kv, p["wk_b"].astype(x.dtype))
+    k_nope = constrain_batch(k_nope.reshape(B, S, h, m.d_nope),
+                             head_dim=2)
+    v = jnp.einsum("bsq,qe->bse", c_kv, p["wv_b"].astype(x.dtype))
+    v = constrain_batch(v.reshape(B, S, h, m.d_v), head_dim=2)
+
+    # Fold (nope ++ rope) into one head dim so the blockwise flash path
+    # applies; the shared rope key broadcasts across heads.
+    scale = (m.d_nope + m.d_rope) ** -0.5
+    qq = jnp.concatenate([q_nope, q_pe], axis=-1)     # (B,S,h,dn+dr)
+    kk = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :],
+                                  (B, S, h, m.d_rope))], axis=-1)
+    o = kref.attention_ref(qq.transpose(0, 2, 1, 3),
+                           kk.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3),
+                           causal=True, scale=scale)
+    o = o.transpose(0, 2, 1, 3).astype(x.dtype).reshape(B, S, h * m.d_v)
+    out = jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+    return out, c_kv, k_pe
+
+
+def mla_forward(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Training: expand latents to per-head K/V."""
+    return _mla_core(cfg, p, x)[0]
+
+
+def mla_prefill(cfg: ArchConfig, p: dict, x: jax.Array, c_kv_cache,
+                k_pe_cache) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Parallel prefill writing the *latent* cache for positions [0, S)."""
+    out, c_kv, k_pe = _mla_core(cfg, p, x)
+    c_kv_cache = lax.dynamic_update_slice_in_dim(
+        c_kv_cache, c_kv.astype(c_kv_cache.dtype), 0, axis=1)
+    k_pe_cache = lax.dynamic_update_slice_in_dim(
+        k_pe_cache, k_pe.astype(k_pe_cache.dtype), 0, axis=1)
+    return out, c_kv_cache, k_pe_cache
+
+
+# --------------------------------------------------------------- decode ----
+
+def init_mla_cache(cfg: ArchConfig, n_layers: int, batch: int, max_seq: int,
+                   dtype) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((n_layers, batch, max_seq, m.kv_lora), dtype),
+        "k_pe": jnp.zeros((n_layers, batch, max_seq, m.d_rope), dtype),
+    }
+
+
+def mla_decode(cfg: ArchConfig, p: dict, x: jax.Array, c_kv_cache: jax.Array,
+               k_pe_cache: jax.Array, pos: jax.Array
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed one-token decode. x: (B, 1, D); caches: (B, S, kv_lora) and
+    (B, S, d_rope)."""
+    m = cfg.mla
+    B = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((1,), pos)
+    q_nope, q_pe = _queries(cfg, p, x, positions)   # (B,1,h,*)
+    c_kv, k_pe = _latents(cfg, p, x, positions)     # (B,1,kv_lora/d_rope)
+    c_kv_cache = lax.dynamic_update_slice_in_dim(
+        c_kv_cache, c_kv.astype(c_kv_cache.dtype), pos, axis=1)
+    k_pe_cache = lax.dynamic_update_slice_in_dim(
+        k_pe_cache, k_pe.astype(k_pe_cache.dtype), pos, axis=1)
+
+    # absorb W^UK into the query: q_c (B, 1, h, kv_lora)
+    cd = c_kv_cache.dtype
+    wk_b = p["wk_b"].astype(cd).reshape(m.kv_lora, h, m.d_nope)
+    q_c = jnp.einsum("bqhd,lhd->bqhl", q_nope.astype(cd), wk_b,
+                     preferred_element_type=jnp.float32)
+
+    # cache stays in storage dtype: f32 accumulation via
+    # preferred_element_type (a cast here would clone the whole cache)
+    scale = (m.d_nope + m.d_rope) ** -0.5
+    s = (jnp.einsum("bqhl,bkl->bhqk", q_c.astype(cd), c_kv_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhd,bkd->bhqk", q_pe.astype(cd), k_pe_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    k_pos = jnp.arange(c_kv_cache.shape[1])
+    s = jnp.where((k_pos <= pos)[None, None, None, :], s, -1e30)
+    attn = jax.nn.softmax(s, axis=-1)
+    # attend in latent space, then expand through W^UV
+    o_lat = jnp.einsum("bhqk,bkl->bqhl", attn.astype(cd), c_kv_cache,
+                       preferred_element_type=jnp.float32)  # (B,1,h,lora)
+    wv_b = p["wv_b"].astype(jnp.float32).reshape(m.kv_lora, h, m.d_v)
+    o = jnp.einsum("bqhl,lhd->bqhd", o_lat, wv_b)
+    o = o.astype(x.dtype).reshape(B, 1, h * m.d_v)
+    out = jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
+    return out, c_kv_cache, k_pe_cache

@@ -1,0 +1,126 @@
+"""Fine-grained mixture-of-experts (DeepSeek-MoE / DeepSeek-V2 style):
+shared experts + routed top-k experts with capacity-bucketed einsum dispatch.
+
+The dispatch/combine one-hots lower to all-to-alls when the expert axis is
+sharded over the ``model`` mesh axis (expert parallelism). The sequence is
+processed in chunks (``moe.chunk``) via ``lax.scan`` so dispatch tensors stay
+VMEM-sized; capacity is per-chunk. Router aux losses (load-balance + z-loss)
+are returned for the train loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import KeyGen, dense_init, dt
+from .config import ArchConfig, MoECfg
+
+
+def init_moe(keys: KeyGen, cfg: ArchConfig,
+             stack: tuple[int, ...] = ()) -> dict:
+    e = cfg.moe
+    d = cfg.d_model
+    dtype = dt(cfg)
+    p = {
+        "router": dense_init(keys(), (*stack, d, e.n_routed), jnp.float32),
+        "w_in": dense_init(keys(), (*stack, e.n_routed, d, e.d_expert),
+                           dtype, in_axis=-2),
+        "w_gate": dense_init(keys(), (*stack, e.n_routed, d, e.d_expert),
+                             dtype, in_axis=-2),
+        "w_out": dense_init(keys(), (*stack, e.n_routed, e.d_expert, d),
+                            dtype, in_axis=-2),
+    }
+    if e.n_shared:
+        sh = e.n_shared * e.d_expert
+        p["shared_in"] = dense_init(keys(), (*stack, d, sh), dtype)
+        p["shared_gate"] = dense_init(keys(), (*stack, d, sh), dtype)
+        p["shared_out"] = dense_init(keys(), (*stack, sh, d), dtype)
+    return p
+
+
+def _capacity(e: MoECfg, chunk_tokens: int) -> int:
+    cap = int(chunk_tokens * e.top_k / e.n_routed * e.capacity_factor)
+    return max(4, ((cap + 3) // 4) * 4)
+
+
+def moe_ffn(cfg: ArchConfig, p: dict, x: jax.Array
+            ) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (out, aux). Chunked over S."""
+    e = cfg.moe
+    B, S, D = x.shape
+    chunk = min(e.chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n_chunks = S // chunk
+    cap = _capacity(e, chunk)
+
+    xs = x.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)  # (n, B, C, D)
+
+    @jax.checkpoint
+    def body(carry, xc):
+        # remat: dispatch/combine one-hots are huge; recompute in backward
+        lb_sum, z_sum = carry
+        yc, lb, z = _moe_chunk(cfg, p, xc, cap)
+        return (lb_sum + lb, z_sum + z), yc
+
+    (lb_sum, z_sum), ys = lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, D)
+
+    if e.n_shared:
+        h = jnp.einsum("bsd,df->bsf", x, p["shared_in"].astype(x.dtype))
+        g = jnp.einsum("bsd,df->bsf", x, p["shared_gate"].astype(x.dtype))
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * h,
+                           p["shared_out"].astype(x.dtype))
+    aux = {"moe_load_balance": lb_sum / n_chunks,
+           "moe_z_loss": z_sum / n_chunks}
+    return y, aux
+
+
+def _moe_chunk(cfg: ArchConfig, p: dict, xc: jax.Array, cap: int):
+    """One seq chunk: xc (B, C, D)."""
+    e = cfg.moe
+    B, C, D = xc.shape
+    E, K = e.n_routed, e.top_k
+
+    # router matmul in the activation dtype (a f32 cast of xc here would
+    # drag a full-width f32 copy of the hidden through the model-axis
+    # all-gather); only the small (B, C, E) logits are upcast.
+    logits = jnp.einsum("bcd,de->bce", xc,
+                        p["router"].astype(xc.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B, C, E)
+    gate, sel = lax.top_k(probs, K)                          # (B, C, K)
+    gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)       # renorm (dsv2)
+
+    # aux losses
+    me = probs.mean(axis=(0, 1))                             # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[sel.reshape(-1)].add(
+        1.0 / (B * C * K))
+    load_balance = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # capacity-bucketed dispatch (Switch-style, per (batch, chunk))
+    onehot = jax.nn.one_hot(sel, E, dtype=jnp.float32)       # (B, C, K, E)
+    # position of each (token, k) within its expert's bucket, in (C*K) order
+    flat = onehot.reshape(B, C * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat               # (B, C*K, E)
+    pos_in_e = (pos_in_e * flat).sum(-1).astype(jnp.int32)   # (B, C*K)
+    keep = (pos_in_e < cap).astype(jnp.float32)
+    slot = jax.nn.one_hot(pos_in_e, cap, dtype=jnp.float32)  # (B, C*K, cap)
+    # dispatch[b, ck, e, cap]
+    dispatch = flat[..., None] * slot[..., None, :] * keep[..., None, None]
+    combine = dispatch.reshape(B, C, K, E, cap) \
+        * gate[..., None, None]                              # weight per slot
+    dispatch = dispatch.reshape(B, C, K, E, cap).sum(2)      # (B, C, E, cap)
+    combine = combine.sum(2)                                 # (B, C, E, cap)
+
+    cd = xc.dtype
+    xe = jnp.einsum("bceg,bcd->begd", dispatch.astype(cd), xc)  # (B,E,cap,D)
+    h = jnp.einsum("begd,edf->begf", xe, p["w_in"].astype(cd))
+    g = jnp.einsum("begd,edf->begf", xe, p["w_gate"].astype(cd))
+    oe = jnp.einsum("begf,efd->begd", jax.nn.silu(g) * h,
+                    p["w_out"].astype(cd))                   # (B,E,cap,D)
+    yc = jnp.einsum("bceg,begd->bcd", combine.astype(cd), oe)
+    return yc, load_balance, z_loss

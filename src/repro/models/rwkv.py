@@ -1,0 +1,184 @@
+"""RWKV-6 (Finch) mixer: token-shift mixing, data-dependent decay via a
+low-rank projection, per-head wkv state recurrence; plus the RWKV
+channel-mix FFN. Attention-free — decode carries only (state, prev-token),
+which is what makes the 500k-context cell O(1) in sequence length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import KeyGen, dense_init, dt, zeros
+from .config import ArchConfig
+
+
+def n_rwkv_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // cfg.rwkv.head_dim
+
+
+def init_rwkv(keys: KeyGen, cfg: ArchConfig,
+              stack: tuple[int, ...] = ()) -> dict:
+    c = cfg.rwkv
+    d = cfg.d_model
+    dtype = dt(cfg)
+    return {
+        # time-mix
+        "mu": zeros((*stack, 5, d), jnp.float32),        # r,k,v,w,g mixing
+        "w_r": dense_init(keys(), (*stack, d, d), dtype),
+        "w_k": dense_init(keys(), (*stack, d, d), dtype),
+        "w_v": dense_init(keys(), (*stack, d, d), dtype),
+        "w_g": dense_init(keys(), (*stack, d, d), dtype),
+        "w_o": dense_init(keys(), (*stack, d, d), dtype),
+        "decay_base": zeros((*stack, d), jnp.float32),
+        "decay_a": dense_init(keys(), (*stack, d, c.decay_lora), dtype),
+        "decay_b": dense_init(keys(), (*stack, c.decay_lora, d), dtype),
+        "bonus": zeros((*stack, d), jnp.float32),        # u
+        "ln_x": {"scale": jnp.ones((*stack, d), jnp.float32)},
+        # channel-mix
+        "mu_c": zeros((*stack, 2, d), jnp.float32),
+        "cm_r": dense_init(keys(), (*stack, d, d), dtype),
+        "cm_k": dense_init(keys(), (*stack, d, cfg.d_ff), dtype),
+        "cm_v": dense_init(keys(), (*stack, cfg.d_ff, d), dtype),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """Previous-token view of x: (B, S, D). prev: (B, D) carried context."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _decay(cfg: ArchConfig, p: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay in (0, 1): w = exp(-exp(...))."""
+    lora = jnp.einsum("bsd,dl->bsl", xw, p["decay_a"].astype(xw.dtype))
+    lora = jnp.einsum("bsl,ld->bsd", jnp.tanh(lora),
+                      p["decay_b"].astype(xw.dtype))
+    logit = p["decay_base"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logit))
+
+
+def _group_norm(p, y):
+    """Per-head group norm of the wkv output. y: (B, S, H, hd)."""
+    y32 = y.astype(jnp.float32)
+    mean = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    yn = (y32 - mean) * lax.rsqrt(var + 1e-5)
+    B, S, H, hd = y.shape
+    scale = p["ln_x"]["scale"].reshape(H, hd)
+    return (yn * scale).reshape(B, S, H * hd)
+
+
+def _rkvwg(cfg, p, x, xx):
+    mu = p["mu"]
+    r = jnp.einsum("bsd,de->bse", _mix(x, xx, mu[0]), p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", _mix(x, xx, mu[1]), p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", _mix(x, xx, mu[2]), p["w_v"].astype(x.dtype))
+    w = _decay(cfg, p, _mix(x, xx, mu[3]))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", _mix(x, xx, mu[4]),
+                               p["w_g"].astype(x.dtype)))
+    return r, k, v, w, g
+
+
+def _wkv_step(u, h, r_t, k_t, v_t, w_t):
+    """h: (B, H, hd, hd) state [k-dim, v-dim]; r/k/v/w_t: (B, H, hd)."""
+    kv = k_t[..., :, None] * v_t[..., None, :]           # (B,H,hd,hd)
+    y = jnp.einsum("bhk,bhkv->bhv", r_t, h + u[..., :, None] * kv)
+    h = w_t[..., :, None] * h + kv
+    return h, y
+
+
+def rwkv_time_mix(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    return _time_mix_core(cfg, p, x)[0]
+
+
+def rwkv_time_mix_prefill(cfg: ArchConfig, p: dict, x: jax.Array):
+    """Returns (out, final wkv state, last-token shift context)."""
+    return _time_mix_core(cfg, p, x)
+
+
+def _time_mix_core(cfg: ArchConfig, p: dict, x: jax.Array):
+    H = n_rwkv_heads(cfg)
+    hd = cfg.rwkv.head_dim
+    B, S, D = x.shape
+    xx = _shift(x)
+    r, k, v, w, g = _rkvwg(cfg, p, x, xx)
+    to_h = lambda a: a.astype(jnp.float32).reshape(B, S, H, hd)  # noqa: E731
+    r, k, v, w = to_h(r), to_h(k), to_h(v), to_h(w)
+    u = p["bonus"].astype(jnp.float32).reshape(H, hd)[None]
+
+    def step(h, inp):
+        r_t, k_t, v_t, w_t = inp
+        return _wkv_step(u, h, r_t, k_t, v_t, w_t)
+
+    h0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))
+    h_final, ys = lax.scan(step, h0, xs)                  # (S, B, H, hd)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, hd)
+    y = _group_norm(p, y).astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"].astype(x.dtype))
+    return out, h_final, x[:, -1]
+
+
+def rwkv_channel_mix_prefill(cfg: ArchConfig, p: dict, x: jax.Array):
+    return rwkv_channel_mix(cfg, p, x), x[:, -1]
+
+
+def rwkv_channel_mix(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    xx = _shift(x)
+    mu = p["mu_c"]
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", _mix(x, xx, mu[0]),
+                                  p["cm_r"].astype(x.dtype)))
+    k = jnp.einsum("bsd,df->bsf", _mix(x, xx, mu[1]),
+                   p["cm_k"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    return r * jnp.einsum("bsf,fd->bsd", k, p["cm_v"].astype(x.dtype))
+
+
+# --------------------------------------------------------------- decode ----
+
+def init_rwkv_cache(cfg: ArchConfig, n_layers: int, batch: int,
+                    dtype) -> dict:
+    H, hd = n_rwkv_heads(cfg), cfg.rwkv.head_dim
+    d = cfg.d_model
+    return {
+        "wkv": jnp.zeros((n_layers, batch, H, hd, hd), jnp.float32),
+        "prev_t": jnp.zeros((n_layers, batch, d), dtype),   # time-mix shift
+        "prev_c": jnp.zeros((n_layers, batch, d), dtype),   # channel-mix shift
+    }
+
+
+def rwkv_time_mix_decode(cfg: ArchConfig, p: dict, x: jax.Array,
+                         wkv_state, prev_t):
+    """x: (B, 1, D). Returns (out, new_wkv, new_prev_t)."""
+    H, hd = n_rwkv_heads(cfg), cfg.rwkv.head_dim
+    B = x.shape[0]
+    xx = _shift(x, prev=prev_t.astype(x.dtype))
+    r, k, v, w, g = _rkvwg(cfg, p, x, xx)
+    to_h = lambda a: a.astype(jnp.float32).reshape(B, H, hd)  # noqa: E731
+    u = p["bonus"].astype(jnp.float32).reshape(H, hd)[None]
+    h, y = _wkv_step(u, wkv_state, to_h(r[:, 0]), to_h(k[:, 0]),
+                     to_h(v[:, 0]), to_h(w[:, 0]))
+    y = y.reshape(B, 1, H, hd)
+    y = _group_norm(p, y).astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"].astype(x.dtype))
+    return out, h, x[:, -1]
+
+
+def rwkv_channel_mix_decode(cfg: ArchConfig, p: dict, x: jax.Array, prev_c):
+    xx = _shift(x, prev=prev_c.astype(x.dtype))
+    mu = p["mu_c"]
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", _mix(x, xx, mu[0]),
+                                  p["cm_r"].astype(x.dtype)))
+    k = jnp.einsum("bsd,df->bsf", _mix(x, xx, mu[1]),
+                   p["cm_k"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    out = r * jnp.einsum("bsf,fd->bsd", k, p["cm_v"].astype(x.dtype))
+    return out, x[:, -1]

@@ -1,0 +1,7 @@
+from .adamw import AdamW, clip_by_global_norm
+from .schedule import cosine_schedule, constant_schedule
+from .compression import compress_int8, decompress_int8, CompressionState
+
+__all__ = ["AdamW", "clip_by_global_norm", "cosine_schedule",
+           "constant_schedule", "compress_int8", "decompress_int8",
+           "CompressionState"]

@@ -1,0 +1,71 @@
+"""AdamW with f32 moments (sharded like the parameters) and global-norm
+clipping. Pure-pytree API (no optax dependency, per the build-everything
+rule)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+
+    def init(self, params) -> dict:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, count):
+        return self.lr(count) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: dict, params) -> tuple:
+        """Returns (new_params, new_state, metrics)."""
+        gnorm = jnp.zeros((), jnp.float32)
+        if self.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        count = state["count"] + 1
+        lr = self._lr(count)
+        c1 = 1.0 - self.b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g32
+            v = self.b2 * v + (1 - self.b2) * g32 * g32
+            step = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_p = jax.tree.unflatten(treedef, [o[2] for o in out])
+        new_state = {"m": new_m, "v": new_v, "count": count}
+        return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

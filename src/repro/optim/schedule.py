@@ -1,0 +1,21 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(c < warmup, warm, cos)
+    return fn

@@ -1,0 +1,128 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` supplies FLOPs and bytes for the per-device
+(SPMD-partitioned) module. Collective bytes are not in cost_analysis — we
+parse the optimized HLO text and sum the output-operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops_bf16: float = 197e12
+    peak_flops_f32: float = 98.5e12
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9
+    hbm_bytes: int = 16 * 2**30
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "f32[16,128,8]{2,1,0}" or "bf16[]"
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, float]:
+    """Sum output bytes per collective kind (deduping -start/-done pairs
+    by counting only -start or the plain op)."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    seen_start: set[str] = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # counted at -start
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(type_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def model_flops(cfg: ArchConfig, kind: str, global_batch: int,
+                seq: int) -> float:
+    """Reference useful FLOPs: 6·N_active·tokens (train) or
+    2·N_active·tokens (inference)."""
+    n = cfg.n_active_params()
+    if kind == "train":
+        tokens = global_batch * seq
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = global_batch * seq
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * global_batch * 1
+
+
+def roofline_report(*, flops_per_chip: float, bytes_per_chip: float,
+                    collective_per_chip: dict[str, float], chips: int,
+                    cfg: ArchConfig, kind: str, global_batch: int, seq: int,
+                    dtype: str = "bfloat16", hw: HW = HW()) -> dict:
+    peak = hw.peak_flops_bf16 if dtype == "bfloat16" else hw.peak_flops_f32
+    t_compute = flops_per_chip / peak
+    t_memory = bytes_per_chip / hw.hbm_bw
+    t_collective = collective_per_chip.get("total", 0.0) / hw.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, kind, global_batch, seq)
+    hlo_flops_global = flops_per_chip * chips
+    useful = mf / hlo_flops_global if hlo_flops_global else 0.0
+    bound = max(t_compute, t_memory, t_collective)
+    # roofline fraction: useful model FLOPs per chip over what the dominant
+    # term's time would allow at peak compute
+    ideal_s = (mf / chips) / peak
+    frac = ideal_s / bound if bound > 0 else 0.0
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_per_chip": flops_per_chip,
+        "hlo_bytes_per_chip": bytes_per_chip,
+        "collective_bytes_per_chip": collective_per_chip,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "step_time_bound_s": bound,
+    }

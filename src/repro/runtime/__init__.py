@@ -1,0 +1,5 @@
+from .watchdog import StepWatchdog, StragglerReport
+from .driver import TrainDriver
+from .crosspod import CrossPodSync
+
+__all__ = ["StepWatchdog", "StragglerReport", "TrainDriver", "CrossPodSync"]

@@ -1,0 +1,80 @@
+"""Cross-pod synchronization with int8 compression + error feedback.
+
+Within a pod, XLA SPMD owns the (fast-ICI) gradient all-reduce. *Across*
+pods — the slow axis at 1000+ node scale — this module implements
+local-SGD-style synchronization (DiLoCo-flavored): each pod runs H inner
+steps independently, then pods exchange the parameter *delta* since the last
+sync, int8-quantized with an error-feedback residual so the compression is
+unbiased over time. Bandwidth per sync drops 4x (f32) / 2x (bf16) plus the
+1/H amortization.
+
+On this single-host container pods are simulated as independent replicas
+(separate param copies); the same arithmetic drives a real multi-pod
+deployment where `exchange` is a psum over the pod axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import compress_int8, decompress_int8
+
+
+@dataclass
+class CrossPodSync:
+    n_pods: int
+    inner_steps: int = 8           # H: steps between syncs
+    outer_lr: float = 1.0          # SGD on the averaged delta
+
+    residuals: list = field(default_factory=list)  # error feedback per pod
+
+    def init(self, params) -> list:
+        """Per-pod replica states + residuals."""
+        self.residuals = [
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            for _ in range(self.n_pods)]
+        return [params for _ in range(self.n_pods)]
+
+    def should_sync(self, step: int) -> bool:
+        return step > 0 and step % self.inner_steps == 0
+
+    def sync(self, anchor, pod_params: list) -> tuple:
+        """anchor: params at the last sync; pod_params: per-pod current.
+        Returns (new_anchor, new per-pod params, stats)."""
+        n = self.n_pods
+        flat_anchor, treedef = jax.tree_util.tree_flatten(anchor)
+        deltas_q = []
+        bytes_raw = bytes_sent = 0
+        for pi in range(n):
+            flat_p = treedef.flatten_up_to(pod_params[pi])
+            flat_r = treedef.flatten_up_to(self.residuals[pi])
+            qs = []
+            new_r = []
+            for a, p, r in zip(flat_anchor, flat_p, flat_r):
+                delta = p.astype(jnp.float32) - a.astype(jnp.float32)
+                q, scale, err = compress_int8(delta, r)
+                qs.append((q, scale))
+                new_r.append(err)
+                bytes_raw += delta.size * 4
+                bytes_sent += q.size * 1 + 4
+            self.residuals[pi] = jax.tree_util.tree_unflatten(treedef, new_r)
+            deltas_q.append(qs)
+        # all-reduce (mean) of the decompressed deltas across pods
+        mean_delta = []
+        for li, a in enumerate(flat_anchor):
+            acc = jnp.zeros(a.shape, jnp.float32)
+            for pi in range(n):
+                q, scale = deltas_q[pi][li]
+                acc = acc + decompress_int8(q, scale)
+            mean_delta.append(acc / n)
+        new_anchor_flat = [
+            (a.astype(jnp.float32) + self.outer_lr * d).astype(a.dtype)
+            for a, d in zip(flat_anchor, mean_delta)]
+        new_anchor = jax.tree_util.tree_unflatten(treedef, new_anchor_flat)
+        new_pods = [new_anchor for _ in range(n)]
+        stats = {"bytes_raw": bytes_raw, "bytes_sent": bytes_sent,
+                 "compression": bytes_raw / max(bytes_sent, 1)}
+        return new_anchor, new_pods, stats

@@ -1,0 +1,4 @@
+from .engine import ServeEngine, Request
+from .batching import ContinuousBatcher
+
+__all__ = ["ServeEngine", "Request", "ContinuousBatcher"]

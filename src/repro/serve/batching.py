@@ -1,0 +1,77 @@
+"""Continuous batching scheduler.
+
+Fixed-slot batching (the KV cache is a static (B, S) arena under jit):
+requests occupy slots; finished requests free their slot immediately and a
+queued request is admitted on the next step with a per-slot prefill.
+Admission control rejects requests longer than the arena. Pure bookkeeping,
+unit-tested without a model.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Slot:
+    request_id: int | None = None
+    pos: int = 0                  # tokens generated so far (incl. prompt)
+    max_pos: int = 0              # stop position
+    active: bool = False
+
+
+@dataclass
+class ContinuousBatcher:
+    n_slots: int
+    max_seq: int
+    queue: deque = field(default_factory=deque)
+    slots: list[Slot] = field(default_factory=list)
+    finished: list[int] = field(default_factory=list)
+    rejected: list[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.slots:
+            self.slots = [Slot() for _ in range(self.n_slots)]
+
+    def submit(self, request_id: int, prompt_len: int,
+               max_new_tokens: int) -> bool:
+        if prompt_len + max_new_tokens > self.max_seq:
+            self.rejected.append(request_id)
+            return False
+        self.queue.append((request_id, prompt_len, max_new_tokens))
+        return True
+
+    def admit(self) -> list[tuple[int, int, int]]:
+        """Fill free slots from the queue.
+        Returns [(slot_idx, request_id, prompt_len)] needing prefill."""
+        admitted = []
+        for i, s in enumerate(self.slots):
+            if s.active or not self.queue:
+                continue
+            rid, plen, mnew = self.queue.popleft()
+            self.slots[i] = Slot(request_id=rid, pos=plen,
+                                 max_pos=plen + mnew, active=True)
+            admitted.append((i, rid, plen))
+        return admitted
+
+    def step(self) -> list[int]:
+        """Advance every active slot one token; returns freed request ids."""
+        freed = []
+        for s in self.slots:
+            if not s.active:
+                continue
+            s.pos += 1
+            if s.pos >= s.max_pos:
+                freed.append(s.request_id)
+                self.finished.append(s.request_id)
+                s.active = False
+                s.request_id = None
+        return freed
+
+    @property
+    def active_slots(self) -> int:
+        return sum(1 for s in self.slots if s.active)
+
+    def done(self) -> bool:
+        return not self.queue and self.active_slots == 0

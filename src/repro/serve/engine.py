@@ -1,0 +1,107 @@
+"""Serving engine: batched decode over a slot arena, driven by the
+continuous batcher in *cohort* mode.
+
+The KV cache is a static (n_slots, max_seq) arena with a single write
+cursor (``cache["pos"]``), so slots advance in lock-step: the batcher admits
+a cohort of requests into free slots, the engine feeds each slot its own
+prompt token-by-token (slots with shorter prompts start sampling earlier),
+and the cohort runs until every member finishes; then the next cohort is
+admitted. Per-slot write cursors (true token-level continuous batching)
+would need scatter cache writes — noted in DESIGN.md as the production
+extension; cohort mode is the standard static-arena TPU serving pattern.
+
+Greedy (argmax) or temperature sampling.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batching import ContinuousBatcher
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 16
+    tokens: list = field(default_factory=list)   # generated
+
+
+class ServeEngine:
+    def __init__(self, model, params, n_slots: int = 4,
+                 max_seq: int = 512, temperature: float = 0.0,
+                 rng_seed: int = 0):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.batcher = ContinuousBatcher(n_slots, max_seq)
+        self._decode = jax.jit(model.decode_step)
+        self._requests: dict[int, Request] = {}
+        self._rng = np.random.default_rng(rng_seed)
+        self.steps_run = 0
+
+    def submit(self, req: Request) -> bool:
+        ok = self.batcher.submit(req.request_id, len(req.prompt),
+                                 req.max_new_tokens)
+        if ok:
+            self._requests[req.request_id] = req
+        return ok
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.temperature <= 0:
+            return logits.argmax(-1).astype(np.int32)
+        z = logits / self.temperature
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([self._rng.choice(p.shape[-1], p=pi)
+                         for pi in p], np.int32)
+
+    def _run_cohort(self, members: list[tuple[int, int, int]]) -> None:
+        """members: [(slot, request_id, prompt_len)]. Fresh cache; decode
+        in lock-step until every member has its tokens."""
+        cache = self.model.init_cache(self.n_slots, self.max_seq)
+        reqs = {slot: self._requests[rid] for slot, rid, _ in members}
+        done = {slot: False for slot in reqs}
+        next_tok = np.zeros((self.n_slots, 1), np.int32)
+        for slot, req in reqs.items():
+            next_tok[slot, 0] = req.prompt[0]
+        t = 0
+        while not all(done.values()) and t < self.max_seq - 1:
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(next_tok))
+            self.steps_run += 1
+            sampled = self._sample(np.asarray(logits[:, 0]))
+            for slot, req in reqs.items():
+                if done[slot]:
+                    continue
+                if t + 1 < len(req.prompt):
+                    next_tok[slot, 0] = req.prompt[t + 1]   # still feeding
+                else:
+                    req.tokens.append(int(sampled[slot]))
+                    next_tok[slot, 0] = sampled[slot]
+                    if len(req.tokens) >= req.max_new_tokens:
+                        done[slot] = True
+            t += 1
+        # release slots
+        for slot, rid, _ in members:
+            s = self.batcher.slots[slot]
+            self.batcher.finished.append(rid)
+            s.active = False
+            s.request_id = None
+
+    def run(self, max_cohorts: int = 1000) -> dict[int, list[int]]:
+        for _ in range(max_cohorts):
+            if self.batcher.done():
+                break
+            members = self.batcher.admit()
+            if members:
+                self._run_cohort(members)
+        return {rid: r.tokens for rid, r in self._requests.items()}

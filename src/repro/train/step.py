@@ -1,0 +1,87 @@
+"""Train-step factory: microbatched gradient accumulation (scan), remat'd
+model forward, AdamW update.
+
+The step is a pure function (state, batch) -> (state, metrics), jitted by the
+launcher with donated state and explicit in/out shardings. Within a jit, XLA
+SPMD owns all gradient reductions (data/model/pod axes); the *compressed*
+cross-pod synchronization is an outer-loop feature (local-SGD-style) in
+``repro.runtime.crosspod`` — see DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.optim.adamw import AdamW
+
+TrainState = dict  # {"params": ..., "opt": ..., "step": int32}
+
+
+def init_train_state(model, optimizer: AdamW, rng) -> TrainState:
+    params = model.init(rng)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for every leaf."""
+    def sp(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model, optimizer: AdamW,
+                    microbatches: int = 1,
+                    accum_dtype=jnp.float32) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum_dtype``: gradient-accumulator dtype. bf16 halves accumulator
+    memory and any gradient-sided collective traffic at a small noise cost
+    (per-micro grads are still computed at full precision and summed).
+    """
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        mbs = _split_micro(batch, microbatches)
+
+        def body(carry, mb):
+            acc, _ = carry
+            (_, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(accum_dtype), acc, grads)
+            return (acc, metrics), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                             params)
+        first = jax.tree.map(lambda x: x[0], mbs)
+        dummy_metrics = jax.eval_shape(lambda p, b: model.loss(p, b)[1],
+                                       params, first)
+        dummy = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             dummy_metrics)
+        (acc, metrics), _ = lax.scan(body, (zeros, dummy), mbs)
+        grads = jax.tree.map(lambda g: g / microbatches, acc)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: dict):
+        grads, metrics = accumulate(state["params"], batch)
+        params, opt, opt_metrics = optimizer.update(grads, state["opt"],
+                                                    state["params"])
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return ({"params": params, "opt": opt, "step": state["step"] + 1},
+                metrics)
+
+    return train_step

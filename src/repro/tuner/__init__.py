@@ -1,0 +1,21 @@
+"""Auto-tuner (the in-repo Kernel Tuner analogue, paper §3/§4.3).
+
+Strategies: random search, simulated annealing, Bayesian optimization (GP+EI,
+pure numpy) — the paper's default is Bayesian optimization with a 15-minute
+budget. Objectives: analytical simulated-TPU cost model (default on this
+CPU-only container) or wall-clock execution (real TPU / interpret mode).
+"""
+
+from .costmodel import CostModel, kernel_time
+from .runner import CostModelEvaluator, WallClockEvaluator, EvalResult
+from .strategies import (STRATEGIES, TuningResult, tune_anneal, tune_bayes,
+                         tune_exhaustive, tune_random)
+from .tune import tune_capture, tune_kernel
+
+__all__ = [
+    "CostModel", "kernel_time",
+    "CostModelEvaluator", "WallClockEvaluator", "EvalResult",
+    "STRATEGIES", "TuningResult", "tune_anneal", "tune_bayes",
+    "tune_exhaustive", "tune_random",
+    "tune_capture", "tune_kernel",
+]

@@ -1,0 +1,50 @@
+"""Pre-tune all built-in kernels for the simulated device pair and ship the
+wisdom files with the repo — so a fresh deployment starts from tuned
+configs instead of defaults (the paper's deployment story: wisdom files are
+versioned application assets).
+
+  PYTHONPATH=src python -m repro.tuner.pretune --out wisdom
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import all_kernels
+from repro.tuner.tune import tune_kernel
+
+# representative problem sizes per kernel family
+PROBLEMS = {
+    "advec_u": [(64, 64, 128), (256, 256, 256), (512, 512, 512)],
+    "diff_uvw": [(64, 64, 128), (256, 256, 256), (512, 512, 512)],
+    "matmul": [(512, 512, 1024), (4096, 4096, 4096), (8192, 8192, 8192)],
+    "flash_attention_causal": [(256, 64, 4096, 128), (32, 8, 32768, 128)],
+    "flash_attention_full": [(256, 64, 4096, 128)],
+}
+DEVICES = ("tpu-v5e", "tpu-v4")
+DTYPES = ("bfloat16", "float32")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="wisdom")
+    ap.add_argument("--strategy", default="bayes")
+    ap.add_argument("--evals", type=int, default=120)
+    args = ap.parse_args(argv)
+
+    for name, builder in sorted(all_kernels().items()):
+        for problem in PROBLEMS.get(name, []):
+            for device in DEVICES:
+                for dtype in DTYPES:
+                    res = tune_kernel(
+                        builder, problem, dtype, device,
+                        strategy=args.strategy, max_evals=args.evals,
+                        time_budget_s=120, wisdom_dir=args.out)
+                    print(f"{name} {problem} {dtype} {device}: "
+                          f"{res.best_score_us:.1f}us "
+                          f"({len(res.evaluations)} evals)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,161 @@
+"""Evaluators: config -> (score, validity) — the tuner's measurement step.
+
+``CostModelEvaluator`` scores a config with the analytical simulated-TPU
+model; ``WallClockEvaluator`` actually executes the built kernel (interpret
+mode on CPU, native Pallas on TPU) and times it. Both optionally *verify* the
+kernel's output against the ``ref.py`` oracle on replayed capture data —
+the paper's "output verification" option in Kernel Tuner.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.builder import KernelBuilder, args_meta
+from repro.core.device import DeviceSpec, get_device
+from repro.core.param import Config
+
+from .costmodel import CostModel, INFEASIBLE
+
+VERIFY_BYTES_LIMIT = 64 * 2**20  # skip in-loop verification beyond this
+
+
+@dataclass
+class EvalResult:
+    score_us: float
+    feasible: bool
+    verified: bool | None = None   # None = not checked
+    error: str = ""
+    info: dict = field(default_factory=dict)
+
+
+def _tolerances(dtype: str) -> tuple[float, float]:
+    if dtype in ("bfloat16",):
+        return 2e-2, 2e-2
+    if dtype in ("float16",):
+        return 1e-2, 1e-2
+    return 1e-5, 1e-5
+
+
+def verify_against_reference(builder: KernelBuilder, config: Config,
+                             args: Sequence[np.ndarray],
+                             interpret: bool = True) -> tuple[bool, str]:
+    """Execute the built kernel on ``args`` and compare with the oracle."""
+    meta = args_meta(*args)
+    try:
+        fn = builder.make(config, meta, interpret=interpret)
+        got = jax.tree.map(np.asarray, fn(*args))
+    except Exception as e:  # noqa: BLE001 — any build/run failure = invalid
+        return False, f"build/run failed: {type(e).__name__}: {e}"
+    ref_fn = builder.make_reference()
+    want = jax.tree.map(np.asarray, ref_fn(*args))
+    got_leaves = jax.tree.leaves(got)
+    want_leaves = jax.tree.leaves(want)
+    if len(got_leaves) != len(want_leaves):
+        return False, "output structure mismatch"
+    dtype = builder.get_dtype(*meta)
+    rtol, atol = _tolerances(dtype)
+    for g, w in zip(got_leaves, want_leaves):
+        if g.shape != w.shape:
+            return False, f"shape mismatch {g.shape} vs {w.shape}"
+        scale = max(1.0, float(np.max(np.abs(w))))
+        if not np.allclose(np.asarray(g, np.float64),
+                           np.asarray(w, np.float64),
+                           rtol=rtol, atol=atol * scale):
+            err = float(np.max(np.abs(np.asarray(g, np.float64) - w)))
+            return False, f"allclose failed, max abs err {err:.3e}"
+    return True, ""
+
+
+class CostModelEvaluator:
+    """Default objective on CPU hosts: analytical model + optional verify."""
+
+    def __init__(self, builder: KernelBuilder, problem: tuple[int, ...],
+                 dtype: str, device: DeviceSpec | str,
+                 verify_args: Sequence[np.ndarray] | None = None,
+                 verify: str = "auto") -> None:
+        self.builder = builder
+        self.problem = tuple(problem)
+        self.dtype = dtype
+        self.device = get_device(device) if isinstance(device, str) else device
+        self.model = CostModel(self.device)
+        self.verify_args = verify_args
+        self.verify = verify
+        self._verified_cache: dict[tuple, tuple[bool, str]] = {}
+
+    def _should_verify(self) -> bool:
+        if self.verify == "none" or self.verify_args is None:
+            return False
+        if self.verify == "full":
+            return True
+        nbytes = sum(int(np.asarray(a).nbytes) for a in self.verify_args)
+        return nbytes <= VERIFY_BYTES_LIMIT
+
+    def __call__(self, config: Config) -> EvalResult:
+        if not self.builder.space.is_valid(config):
+            return EvalResult(INFEASIBLE, False, error="restricted")
+        w = self.builder.make_workload(config, self.problem, self.dtype)
+        key = "|".join(f"{k}={config[k]}" for k in sorted(config))
+        key += f"|{self.problem}|{self.dtype}"
+        t = self.model.time(w, self.dtype, noise_key=key)
+        if not np.isfinite(t):
+            return EvalResult(INFEASIBLE, False, error="vmem overflow",
+                              info={"vmem_bytes": w.vmem_bytes})
+        verified: bool | None = None
+        if self._should_verify():
+            fkey = self.builder.space.freeze(config)
+            if fkey not in self._verified_cache:
+                self._verified_cache[fkey] = verify_against_reference(
+                    self.builder, config, self.verify_args)
+            ok, msg = self._verified_cache[fkey]
+            verified = ok
+            if not ok:
+                return EvalResult(INFEASIBLE, False, verified=False,
+                                  error=msg)
+        return EvalResult(t * 1e6, True, verified=verified,
+                          info={"workload": w})
+
+
+class WallClockEvaluator:
+    """Measure actual execution time (real hardware, or interpret mode)."""
+
+    def __init__(self, builder: KernelBuilder, args: Sequence[np.ndarray],
+                 interpret: bool | None = None, repeats: int = 3,
+                 verify: bool = True) -> None:
+        self.builder = builder
+        self.args = [np.asarray(a) for a in args]
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = interpret
+        self.repeats = repeats
+        self.verify = verify
+
+    def __call__(self, config: Config) -> EvalResult:
+        if not self.builder.space.is_valid(config):
+            return EvalResult(INFEASIBLE, False, error="restricted")
+        meta = args_meta(*self.args)
+        if self.verify:
+            ok, msg = verify_against_reference(
+                self.builder, config, self.args, interpret=self.interpret)
+            if not ok:
+                return EvalResult(INFEASIBLE, False, verified=False,
+                                  error=msg)
+        try:
+            fn = self.builder.make(config, meta, interpret=self.interpret)
+            compiled = jax.jit(fn).lower(*meta).compile()
+            compiled(*self.args)  # warmup
+            times = []
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(compiled(*self.args))
+                times.append(time.perf_counter() - t0)
+            return EvalResult(min(times) * 1e6, True,
+                              verified=True if self.verify else None)
+        except Exception as e:  # noqa: BLE001
+            return EvalResult(INFEASIBLE, False,
+                              error=f"{type(e).__name__}: {e}")

@@ -1,0 +1,248 @@
+"""Search-space optimization strategies (paper §3, §4.3, Fig 3).
+
+The paper's default is Bayesian optimization (15-minute budget); random
+search is the unbiased baseline used for the Fig 2 histograms. We implement
+both, plus simulated annealing and capped exhaustive enumeration. The GP is
+pure numpy (RBF kernel, expected-improvement acquisition).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core.param import Config, ConfigSpace
+
+from .runner import EvalResult
+
+Evaluate = Callable[[Config], EvalResult]
+
+
+@dataclass
+class Evaluation:
+    config: Config
+    score_us: float
+    feasible: bool
+    wall_s: float          # cumulative session wall time when evaluated
+    error: str = ""
+
+
+@dataclass
+class TuningResult:
+    strategy: str
+    best_config: Config | None
+    best_score_us: float
+    evaluations: list[Evaluation] = field(default_factory=list)
+    wall_s: float = 0.0
+
+    @property
+    def feasible_evaluations(self) -> list[Evaluation]:
+        return [e for e in self.evaluations if e.feasible]
+
+    def trajectory(self) -> list[tuple[float, float]]:
+        """(wall_s, best-so-far score) pairs — the Fig 3 dashed line."""
+        out, best = [], float("inf")
+        for e in self.evaluations:
+            if e.feasible and e.score_us < best:
+                best = e.score_us
+            if math.isfinite(best):
+                out.append((e.wall_s, best))
+        return out
+
+
+class _Session:
+    """Shared bookkeeping: dedup, budget, best-so-far."""
+
+    MAX_CONSECUTIVE_DUPS = 300   # space likely exhausted beyond this
+
+    def __init__(self, space: ConfigSpace, evaluate: Evaluate,
+                 max_evals: int, time_budget_s: float | None):
+        self.space = space
+        self.evaluate = evaluate
+        self.max_evals = max_evals
+        self.time_budget_s = time_budget_s
+        self.t0 = time.perf_counter()
+        self.seen: dict[tuple, Evaluation] = {}
+        self.evals: list[Evaluation] = []
+        self.best: Evaluation | None = None
+        self._dups = 0
+
+    def exhausted(self) -> bool:
+        if len(self.evals) >= self.max_evals:
+            return True
+        if self._dups >= self.MAX_CONSECUTIVE_DUPS:
+            return True   # the whole valid space has (likely) been seen
+        if (self.time_budget_s is not None
+                and time.perf_counter() - self.t0 >= self.time_budget_s):
+            return True
+        return False
+
+    def run(self, config: Config) -> Evaluation:
+        key = self.space.freeze(config)
+        if key in self.seen:
+            self._dups += 1
+            return self.seen[key]
+        self._dups = 0
+        r = self.evaluate(config)
+        ev = Evaluation(config=dict(config), score_us=r.score_us,
+                        feasible=r.feasible,
+                        wall_s=time.perf_counter() - self.t0, error=r.error)
+        self.seen[key] = ev
+        self.evals.append(ev)
+        if ev.feasible and (self.best is None
+                            or ev.score_us < self.best.score_us):
+            self.best = ev
+        return ev
+
+    def result(self, strategy: str) -> TuningResult:
+        return TuningResult(
+            strategy=strategy,
+            best_config=dict(self.best.config) if self.best else None,
+            best_score_us=self.best.score_us if self.best else float("inf"),
+            evaluations=self.evals,
+            wall_s=time.perf_counter() - self.t0)
+
+
+def tune_random(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
+                rng: np.random.Generator | None = None,
+                time_budget_s: float | None = None) -> TuningResult:
+    rng = rng or np.random.default_rng(0)
+    if space.cardinality() <= max_evals:
+        # budget covers the whole space: shuffled exhaustive enumeration
+        s = _Session(space, evaluate, max_evals, time_budget_s)
+        cfgs = list(space.enumerate())
+        rng.shuffle(cfgs)
+        for cfg in cfgs:
+            if s.exhausted():
+                break
+            s.run(cfg)
+        return s.result("random")
+    s = _Session(space, evaluate, max_evals, time_budget_s)
+    while not s.exhausted():
+        cfg = space.sample(rng, 1)[0]
+        s.run(cfg)
+    return s.result("random")
+
+
+def tune_exhaustive(space: ConfigSpace, evaluate: Evaluate,
+                    limit: int = 100_000) -> TuningResult:
+    s = _Session(space, evaluate, limit, None)
+    for cfg in space.enumerate(limit=limit):
+        if s.exhausted():
+            break
+        s.run(cfg)
+    return s.result("exhaustive")
+
+
+def tune_anneal(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
+                rng: np.random.Generator | None = None,
+                time_budget_s: float | None = None,
+                t0: float = 0.3, t1: float = 0.01) -> TuningResult:
+    """Simulated annealing over single-parameter mutations."""
+    rng = rng or np.random.default_rng(0)
+    s = _Session(space, evaluate, max_evals, time_budget_s)
+    cur = s.run(space.default_config())
+    tries = 0
+    while not s.exhausted():
+        frac = len(s.evals) / max(s.max_evals, 1)
+        temp = t0 * (t1 / t0) ** frac
+        cand = space.neighbor(cur.config, rng)
+        ev = s.run(cand)
+        tries += 1
+        if not cur.feasible:
+            cur = ev
+            continue
+        if ev.feasible:
+            # relative-improvement acceptance
+            delta = (ev.score_us - cur.score_us) / max(cur.score_us, 1e-9)
+            if delta <= 0 or rng.random() < math.exp(-delta / temp):
+                cur = ev
+        if tries % 50 == 0 and s.best is not None:
+            cur = s.best  # periodic restart from incumbent
+    return s.result("anneal")
+
+
+# ----------------------------- Bayesian (GP-EI) -----------------------------
+
+def _rbf(a: np.ndarray, b: np.ndarray, ls: float) -> np.ndarray:
+    d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+    return np.exp(-0.5 * d2 / ls**2)
+
+
+def _gp_posterior(x: np.ndarray, y: np.ndarray, xq: np.ndarray,
+                  ls: float = 0.25, noise: float = 1e-3
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    k = _rbf(x, x, ls) + noise * np.eye(len(x))
+    kq = _rbf(xq, x, ls)
+    try:
+        chol = np.linalg.cholesky(k)
+    except np.linalg.LinAlgError:
+        chol = np.linalg.cholesky(k + 1e-6 * np.eye(len(x)))
+    alpha = np.linalg.solve(chol.T, np.linalg.solve(chol, y))
+    mean = kq @ alpha
+    v = np.linalg.solve(chol, kq.T)
+    var = np.clip(1.0 - (v**2).sum(0), 1e-12, None)
+    return mean, var
+
+
+def _expected_improvement(mean: np.ndarray, var: np.ndarray,
+                          best: float) -> np.ndarray:
+    std = np.sqrt(var)
+    z = (best - mean) / std
+    cdf = 0.5 * (1 + np.vectorize(math.erf)(z / math.sqrt(2)))
+    pdf = np.exp(-0.5 * z**2) / math.sqrt(2 * math.pi)
+    return (best - mean) * cdf + std * pdf
+
+
+def tune_bayes(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
+               rng: np.random.Generator | None = None,
+               time_budget_s: float | None = None,
+               n_init: int = 12, pool: int = 256) -> TuningResult:
+    """GP + expected improvement over the unit-encoded config space
+    (the paper's default strategy, per Willemsen et al. [28])."""
+    rng = rng or np.random.default_rng(0)
+    s = _Session(space, evaluate, max_evals, time_budget_s)
+    # Latin-ish init: default + random
+    s.run(space.default_config())
+    for cfg in space.sample(rng, max(n_init - 1, 1)):
+        if s.exhausted():
+            break
+        s.run(cfg)
+    while not s.exhausted():
+        feas = [e for e in s.evals if e.feasible]
+        if len(feas) < 3:
+            s.run(space.sample(rng, 1)[0])
+            continue
+        # Fit GP on (up to) the most recent 160 feasible evals, log-scores
+        feas = feas[-160:]
+        x = np.stack([space.to_unit(e.config) for e in feas])
+        y = np.log(np.array([e.score_us for e in feas]))
+        mu, sd = y.mean(), y.std() + 1e-9
+        yn = (y - mu) / sd
+        # candidate pool: random + neighbors of the incumbent
+        cands = space.sample(rng, pool // 2)
+        if s.best is not None:
+            cands += [space.neighbor(s.best.config, rng)
+                      for _ in range(pool // 2)]
+        seen_keys = set(s.seen)
+        cands = [c for c in cands if space.freeze(c) not in seen_keys]
+        if not cands:
+            s.run(space.sample(rng, 1)[0])
+            continue
+        xq = np.stack([space.to_unit(c) for c in cands])
+        mean, var = _gp_posterior(x, yn, xq)
+        ei = _expected_improvement(mean, var, yn.min())
+        s.run(cands[int(np.argmax(ei))])
+    return s.result("bayes")
+
+
+STRATEGIES: dict[str, Callable[..., TuningResult]] = {
+    "random": tune_random,
+    "bayes": tune_bayes,
+    "anneal": tune_anneal,
+    "exhaustive": tune_exhaustive,
+}

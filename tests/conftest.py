@@ -1,0 +1,37 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets 512 itself)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def small_fields(rng):
+    """Small periodic 3-D fields for the stencil kernels."""
+    u, v, w = (rng.standard_normal((32, 32, 128)).astype(np.float32)
+               for _ in range(3))
+    evisc = (rng.standard_normal((32, 32, 128)).astype(np.float32)) ** 2
+    scal = np.array([[1.1, 0.9, 1.3, 0.0]], np.float32)
+    return u, v, w, evisc, scal
+
+
+@pytest.fixture()
+def wisdom_dir(tmp_path, monkeypatch):
+    d = tmp_path / "wisdom"
+    monkeypatch.setenv("KERNEL_LAUNCHER_WISDOM_DIR", str(d))
+    return d
+
+
+@pytest.fixture()
+def capture_dir(tmp_path, monkeypatch):
+    d = tmp_path / "captures"
+    monkeypatch.setenv("KERNEL_LAUNCHER_CAPTURE_DIR", str(d))
+    return d

@@ -1,0 +1,82 @@
+"""ConfigSpace unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ConfigSpace
+
+
+def make_space():
+    s = ConfigSpace()
+    s.tune("block_x", (16, 32, 64, 128), default=32)
+    s.tune("block_y", (1, 2, 4, 8))
+    s.tune("unroll", (1, 2, 4))
+    s.tune("flag", (True, False))
+    s.restrict("block_x * block_y <= 512")
+    s.restrict(lambda c: c["block_x"] % c["unroll"] == 0)
+    return s
+
+
+def test_cardinality_and_enumerate():
+    s = make_space()
+    assert s.cardinality() == 4 * 4 * 3 * 2
+    cfgs = list(s.enumerate())
+    assert all(s.is_valid(c) for c in cfgs)
+    assert len(cfgs) == s.valid_cardinality()
+    assert 0 < len(cfgs) < s.cardinality()
+
+
+def test_default_is_valid():
+    s = make_space()
+    assert s.is_valid(s.default_config())
+
+
+def test_duplicate_param_rejected():
+    s = ConfigSpace()
+    s.tune("a", (1, 2))
+    with pytest.raises(ValueError):
+        s.tune("a", (3,))
+
+
+def test_default_not_in_values_rejected():
+    s = ConfigSpace()
+    with pytest.raises(ValueError):
+        s.tune("a", (1, 2), default=3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 8))
+def test_sample_produces_valid_configs(seed, n):
+    s = make_space()
+    rng = np.random.default_rng(seed)
+    for cfg in s.sample(rng, n):
+        assert s.is_valid(cfg)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_neighbor_stays_valid_and_close(seed):
+    s = make_space()
+    rng = np.random.default_rng(seed)
+    cfg = s.sample(rng, 1)[0]
+    nb = s.neighbor(cfg, rng)
+    assert s.is_valid(nb)
+    diffs = sum(1 for k in cfg if cfg[k] != nb[k])
+    assert diffs <= 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_unit_encoding_roundtrip(seed):
+    s = make_space()
+    rng = np.random.default_rng(seed)
+    cfg = s.sample(rng, 1)[0]
+    assert s.from_unit(s.to_unit(cfg)) == cfg
+
+
+def test_freeze_is_hashable_and_stable():
+    s = make_space()
+    c = s.default_config()
+    assert s.freeze(c) == s.freeze(dict(reversed(list(c.items()))))
+    {s.freeze(c): 1}

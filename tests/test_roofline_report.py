@@ -1,0 +1,71 @@
+"""HLO walker + roofline report units."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.configs import get_arch
+from repro.roofline import model_flops, roofline_report
+from repro.roofline.hlo_parse import (_nbytes, _numel, _shape_dims,
+                                      _split_type_opcode, hlo_cost_analysis)
+
+
+def test_shape_parsing():
+    assert _numel("f32[2,3,4]{2,1,0}") == 24
+    assert _nbytes("bf16[8,8]") == 128
+    assert _nbytes("(f32[4], bf16[2,2])") == 24
+    assert _shape_dims("pred[]") == [("pred", 1)]
+
+
+def test_split_type_opcode_tuple_with_comments():
+    rhs = ("(s32[], f32[512,512]{1,0}, /*index=5*/f32[4,4]{1,0}) "
+           "while(%tuple), condition=%c, body=%b")
+    t, oc, rest = _split_type_opcode(rhs)
+    assert oc == "while"
+    assert "condition=%c" in rest
+    assert _nbytes(t) == 4 + 512 * 512 * 4 + 64
+
+
+def test_trip_count_multiplication_nested():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def nested(a):
+        def outer(c, _):
+            c2 = lax.scan(lambda d, __: (d @ d, None), c, None, length=3)[0]
+            return c2, None
+        return lax.scan(outer, a, None, length=4)[0]
+
+    r = hlo_cost_analysis(jax.jit(nested).lower(x).compile().as_text())
+    expect = 12 * 2 * 64**3
+    assert r["flops"] == pytest.approx(expect, rel=0.05)
+
+
+def test_collectives_counted_with_trips():
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device for real collectives")
+
+
+def test_roofline_report_terms():
+    cfg = get_arch("gemma2-2b")
+    rep = roofline_report(
+        flops_per_chip=1.97e14, bytes_per_chip=8.19e11,
+        collective_per_chip={"total": 5e10}, chips=256, cfg=cfg,
+        kind="train", global_batch=256, seq=4096)
+    assert rep["compute_s"] == pytest.approx(1.0)
+    assert rep["memory_s"] == pytest.approx(1.0)
+    assert rep["collective_s"] == pytest.approx(1.0)
+    assert rep["model_flops"] == pytest.approx(
+        6 * cfg.n_active_params() * 256 * 4096)
+    assert 0 < rep["roofline_fraction"] < 1
+
+
+def test_model_flops_moe_uses_active():
+    dense = get_arch("codeqwen1.5-7b")
+    moe = get_arch("deepseek-moe-16b")
+    assert moe.n_active_params() < 0.3 * moe.n_params()
+    assert dense.n_active_params() == dense.n_params()
+    assert model_flops(moe, "train", 1, 1) == 6 * moe.n_active_params()
+    assert model_flops(moe, "decode", 4, 999) == \
+        2 * moe.n_active_params() * 4

@@ -1,0 +1,95 @@
+"""Continuous-batcher scheduling properties + CLI entry points."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.batching import ContinuousBatcher
+
+
+def test_admission_and_slot_lifecycle():
+    b = ContinuousBatcher(n_slots=2, max_seq=64)
+    for rid in range(3):
+        assert b.submit(rid, prompt_len=4, max_new_tokens=4)
+    admitted = b.admit()
+    assert [a[0] for a in admitted] == [0, 1]       # two slots filled
+    assert b.active_slots == 2
+    assert b.admit() == []                           # queue waits
+    for _ in range(4):
+        b.step()
+    assert b.active_slots == 0
+    assert sorted(b.finished) == [0, 1]
+    admitted = b.admit()                             # third request enters
+    assert admitted[0][1] == 2
+    assert not b.done()
+
+
+def test_rejection_of_oversize():
+    b = ContinuousBatcher(n_slots=1, max_seq=16)
+    assert not b.submit(9, prompt_len=10, max_new_tokens=10)
+    assert b.rejected == [9]
+    assert b.done()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_every_accepted_request_eventually_finishes(data):
+    """Property: any mix of valid requests drains completely."""
+    n_slots = data.draw(st.integers(1, 4))
+    b = ContinuousBatcher(n_slots=n_slots, max_seq=32)
+    n_req = data.draw(st.integers(1, 10))
+    accepted = []
+    for rid in range(n_req):
+        plen = data.draw(st.integers(1, 20))
+        mnew = data.draw(st.integers(1, 20))
+        if b.submit(rid, plen, mnew):
+            accepted.append(rid)
+    for _ in range(10_000):
+        if b.done():
+            break
+        b.admit()
+        b.step()
+    assert b.done()
+    assert sorted(b.finished) == sorted(accepted)
+
+
+def test_tuner_cli_end_to_end(tmp_path, monkeypatch, capture_dir,
+                              wisdom_dir, small_fields):
+    """python -m repro.tuner.tune over a real capture directory."""
+    from repro.core import CAPTURE_ENV, WisdomKernel, get_kernel
+    from repro.tuner.tune import main
+
+    u, v, w, _, scal = small_fields
+    monkeypatch.setenv(CAPTURE_ENV, "advec_u")
+    WisdomKernel(get_kernel("advec_u"), wisdom_dir=wisdom_dir,
+                 device_kind="tpu-v5e", backend="reference")(u, v, w, scal)
+    monkeypatch.delenv(CAPTURE_ENV)
+    rc = main(["--captures", f"{capture_dir}/*.capture.json",
+               "--strategy", "anneal", "--budget-evals", "30",
+               "--budget-seconds", "30", "--device", "tpu-v5e",
+               "--wisdom-dir", str(wisdom_dir)])
+    assert rc == 0
+    from repro.core import Wisdom
+    assert len(Wisdom.load("advec_u", wisdom_dir)) >= 1
+
+
+def test_tuner_cli_no_captures(tmp_path):
+    from repro.tuner.tune import main
+    assert main(["--captures", f"{tmp_path}/none/*.json"]) == 1
+
+
+def test_shipped_wisdom_is_loadable_and_selected():
+    """The repo's pre-tuned wisdom/ files drive selection out of the box."""
+    from pathlib import Path
+    from repro.core import Wisdom, WisdomKernel, get_kernel
+    wdir = Path(__file__).resolve().parents[1] / "wisdom"
+    if not wdir.exists():
+        pytest.skip("wisdom/ not generated")
+    w = Wisdom.load("matmul", wdir)
+    assert len(w) >= 4
+    k = WisdomKernel(get_kernel("matmul"), wisdom_dir=wdir,
+                     device_kind="tpu-v5e")
+    cfg, tier = k.select_config((4096, 4096, 4096), "bfloat16")
+    assert tier == "exact"
+    cfg2, tier2 = k.select_config((5000, 5000, 5000), "bfloat16")
+    assert tier2 == "device+dtype"        # fuzzy match on the shipped data

@@ -1,0 +1,103 @@
+"""Wisdom-file persistence + the paper §4.5 selection heuristic."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Wisdom, WisdomRecord, make_provenance
+
+
+def rec(device="tpu-v5e", family="tpu-v5", problem=(256, 256, 256),
+        dtype="float32", score=100.0, config=None):
+    return WisdomRecord(device_kind=device, device_family=family,
+                        problem_size=tuple(problem), dtype=dtype,
+                        config=config or {"block": 1},
+                        score_us=score, provenance=make_provenance())
+
+
+def test_roundtrip(tmp_path):
+    w = Wisdom("k")
+    w.add(rec(score=5.0, config={"block": 8}))
+    w.add(rec(device="tpu-v4", family="tpu-v4", score=7.0))
+    p = w.save(tmp_path)
+    assert p.exists()
+    w2 = Wisdom.load("k", tmp_path)
+    assert len(w2) == 2
+    assert w2.records[0].config == {"block": 8}
+
+
+def test_retune_keeps_best():
+    w = Wisdom("k")
+    w.add(rec(score=10.0, config={"block": 1}))
+    w.add(rec(score=5.0, config={"block": 2}))    # same scenario, better
+    w.add(rec(score=9.0, config={"block": 3}))    # same scenario, worse
+    assert len(w) == 1
+    assert w.records[0].config == {"block": 2}
+
+
+def test_selection_tiers():
+    w = Wisdom("k")
+    w.add(rec(problem=(256, 256, 256), config={"c": "exact"}))
+    w.add(rec(problem=(512, 512, 512), config={"c": "far"}))
+    w.add(rec(device="tpu-v4", family="tpu-v4", problem=(256, 256, 256),
+              config={"c": "other-dev"}))
+    default = {"c": "default"}
+
+    cfg, tier = w.select("tpu-v5e", (256, 256, 256), "float32", default)
+    assert tier == "exact" and cfg["c"] == "exact"
+
+    # same device, fuzzy size -> Euclidean-closest record
+    cfg, tier = w.select("tpu-v5e", (300, 300, 300), "float32", default)
+    assert tier == "device+dtype" and cfg["c"] == "exact"
+    cfg, tier = w.select("tpu-v5e", (500, 500, 500), "float32", default)
+    assert cfg["c"] == "far"
+
+    # unknown device with known family member -> family tier
+    cfg, tier = w.select("tpu-v4", (256, 256, 256), "float32", default)
+    assert cfg["c"] == "other-dev"
+
+    # unknown everything -> any record, closest size
+    cfg, tier = w.select("tpu-v9x", (256, 256, 256), "bfloat16", default)
+    assert tier in ("any", "any+dtype")
+
+    # empty wisdom -> default
+    cfg, tier = Wisdom("k2").select("tpu-v5e", (1, 2), "float32", default)
+    assert tier == "default" and cfg == default
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    probs=st.lists(st.tuples(st.integers(8, 1024), st.integers(8, 1024)),
+                   min_size=1, max_size=6, unique=True),
+    query=st.tuples(st.integers(8, 1024), st.integers(8, 1024)),
+)
+def test_same_device_selection_minimizes_distance(probs, query):
+    w = Wisdom("k")
+    for i, p in enumerate(probs):
+        w.add(rec(problem=p, config={"i": i}, score=1.0))
+    cfg, tier = w.select("tpu-v5e", query, "float32", {"i": -1})
+    dists = [np.hypot(p[0] - query[0], p[1] - query[1]) for p in probs]
+    best = int(np.argmin(dists))
+    assert cfg["i"] == best or dists[cfg["i"]] == dists[best]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_selection_never_fails_never_invents(data):
+    """Property: select() always returns either a stored config or the
+    default, for arbitrary record sets and queries."""
+    w = Wisdom("k")
+    n = data.draw(st.integers(0, 5))
+    stored = []
+    for i in range(n):
+        d = data.draw(st.sampled_from(["tpu-v5e", "tpu-v4", "gpu-x"]))
+        fam = "-".join(d.split("-")[:2])
+        p = data.draw(st.tuples(st.integers(1, 64), st.integers(1, 64)))
+        dt = data.draw(st.sampled_from(["float32", "bfloat16"]))
+        w.add(WisdomRecord(d, fam, p, dt, {"i": i}, float(i + 1), {}))
+        stored.append({"i": i})
+    q_dev = data.draw(st.sampled_from(["tpu-v5e", "tpu-v4", "other"]))
+    q_p = data.draw(st.tuples(st.integers(1, 64), st.integers(1, 64)))
+    cfg, tier = w.select(q_dev, q_p, "float32", {"i": -1})
+    assert cfg in stored + [{"i": -1}]
+    if n == 0:
+        assert tier == "default"
