@@ -1,0 +1,89 @@
+"""Online-tuning convergence: launches-to-within-5%-of-offline-optimum.
+
+For each scenario: start from an *empty* wisdom dir, serve synthetic
+traffic through a WisdomKernel with the online autotuner attached
+(cost-model objective, fixed seed), and record
+
+  * launches until the incumbent is within 5% of the offline optimum
+    (the exhaustive-search best under the same objective),
+  * launches until promotion (the online record landing in wisdom),
+  * the trial fraction (how much live traffic ran candidates), and
+  * the measured online overhead per launch.
+
+CSV: scenario, launches_to_5pct, launches_to_promo, online_us, offline_us,
+ratio, trial_frac, overhead_us_per_launch.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.core import WisdomKernel, get_device, get_kernel
+from repro.online import enable_online_tuning
+from repro.tuner.runner import CostModelEvaluator
+from repro.tuner.strategies import tune_exhaustive
+
+from .common import csv_row
+
+MAX_LAUNCHES = 300
+TARGET = 1.05
+
+
+def _matmul_args(m, n, k, dtype):
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((m, k)).astype(dtype)
+    b = rng.standard_normal((k, n)).astype(dtype)
+    return a, b
+
+
+SCENARIOS = [
+    # (label, kernel, launch args, problem, dtype, device)
+    ("matmul-256-f32-v5e", "matmul", _matmul_args(256, 256, 256, "float32"),
+     (256, 256, 256), "float32", "tpu-v5e"),
+    ("matmul-512x256-f32-v4", "matmul",
+     _matmul_args(512, 256, 512, "float32"), (512, 256, 512), "float32",
+     "tpu-v4"),
+]
+
+
+def run():
+    yield csv_row("online_convergence", "scenario", "launches_to_5pct",
+                  "launches_to_promo", "online_us", "offline_us", "ratio",
+                  "trial_frac", "overhead_us_per_launch")
+    for label, kname, args, problem, dtype, device in SCENARIOS:
+        builder = get_kernel(kname)
+        ev = CostModelEvaluator(builder, problem, dtype, get_device(device),
+                                verify="none")
+        offline = tune_exhaustive(builder.space, ev)
+
+        wisdom_dir = tempfile.mkdtemp(prefix="kl-online-bench-")
+        kernel = WisdomKernel(builder, wisdom_dir=wisdom_dir,
+                              device_kind=device, backend="reference")
+        svc = enable_online_tuning(kernel, objective="costmodel", seed=0)
+
+        to_5pct = to_promo = None
+        for i in range(1, MAX_LAUNCHES + 1):
+            kernel(*args)
+            if to_promo is None and svc.promotions():
+                to_promo = i
+            if to_5pct is None:
+                cfg, _ = kernel.select_config(problem, dtype)
+                if ev(cfg).score_us <= offline.best_score_us * TARGET:
+                    to_5pct = i
+            if to_5pct is not None and to_promo is not None:
+                break
+
+        cfg, _ = kernel.select_config(problem, dtype)
+        online_us = ev(cfg).score_us
+        st = svc.status()
+        launches = max(st["launches"], 1)
+        yield csv_row(
+            "online_convergence", label,
+            to_5pct if to_5pct is not None else f">{MAX_LAUNCHES}",
+            to_promo if to_promo is not None else f">{MAX_LAUNCHES}",
+            f"{online_us:.2f}", f"{offline.best_score_us:.2f}",
+            f"{online_us / offline.best_score_us:.3f}",
+            f"{st['trials'] / launches:.3f}",
+            f"{1e6 * st['overhead_per_launch_s']:.1f}")

@@ -6,6 +6,8 @@
   Fig 4    -> portability        (cross-scenario optimum transfer matrix)
   Tables 4/5 -> ppm              (performance-portability metric)
   Fig 5    -> overhead           (first vs cached launch breakdown)
+  (ours)   -> online_convergence (traffic-driven tuning: launches to reach
+                                  5% of the offline optimum)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 """
@@ -17,7 +19,7 @@ import time
 
 
 MODULES = ("capture_bench", "distribution", "tuning_session",
-           "portability", "ppm", "overhead")
+           "portability", "ppm", "overhead", "online_convergence")
 
 
 def main() -> None:

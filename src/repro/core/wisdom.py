@@ -90,11 +90,21 @@ class WisdomRecord:
 
 
 def _distance(a: Sequence[int], b: Sequence[int]) -> float:
-    """Euclidean distance between problem sizes (zero-padded to equal rank)."""
+    """Scale-normalized distance between problem sizes.
+
+    Euclidean distance over per-dimension log2 ratios rather than raw
+    extents: a 4096-wide axis would otherwise drown out every other
+    dimension in the tier 2–4 nearest-scenario comparisons, making e.g. a
+    2x change on a size-8 axis (which matters enormously for tiling) count
+    for nothing next to a 5% change on the 4096 axis. Log ratios weigh
+    relative change equally per dimension. Missing dimensions (rank
+    mismatch) are padded with 1, i.e. treated as a degenerate axis.
+    """
     n = max(len(a), len(b))
-    a = tuple(a) + (0,) * (n - len(a))
-    b = tuple(b) + (0,) * (n - len(b))
-    return math.sqrt(sum((x - y) ** 2 for x, y in zip(a, b)))
+    a = tuple(a) + (1,) * (n - len(a))
+    b = tuple(b) + (1,) * (n - len(b))
+    return math.sqrt(sum(
+        math.log2(max(x, 1) / max(y, 1)) ** 2 for x, y in zip(a, b)))
 
 
 class Wisdom:

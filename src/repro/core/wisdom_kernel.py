@@ -10,6 +10,14 @@ launches of the same scenario.
 Works both eagerly (concrete arrays: AOT-compiled executables, timing stats)
 and under an outer ``jax.jit`` trace (model integration: selection happens at
 trace time from static shapes, the built kernel is inlined).
+
+An :class:`repro.online.OnlineTuner` may be attached (explicitly via
+``attach_online`` / ``repro.online.enable_online_tuning``, or automatically
+when ``KERNEL_LAUNCHER_ONLINE=1``): every eager launch then reports its
+selection tier, a small epsilon fraction of launches runs a candidate
+config instead of the incumbent ("trial" tier), and confident winners are
+promoted into the wisdom file live. Traced launches never participate —
+the outer jit owns those.
 """
 
 from __future__ import annotations
@@ -22,12 +30,18 @@ from typing import Callable
 import jax
 import numpy as np
 
-from .builder import KernelBuilder, args_meta
+from .builder import ArgsMeta, KernelBuilder, args_meta
 from .capture import capture_requested, write_capture
 from .compile_cache import CompileCache, LaunchStats
 from .device import current_device_kind
 from .param import Config
 from .wisdom import Wisdom
+
+
+def online_requested() -> bool:
+    """KERNEL_LAUNCHER_ONLINE=1 auto-attaches an online tuner per kernel."""
+    return os.environ.get("KERNEL_LAUNCHER_ONLINE", "").lower() in (
+        "1", "true", "on", "yes")
 
 BACKEND_ENV = "REPRO_KERNEL_BACKEND"
 _VALID_BACKENDS = ("auto", "pallas", "interpret", "reference")
@@ -56,6 +70,10 @@ class WisdomKernel:
         self._selection_cache: dict[tuple, tuple[Config, str]] = {}
         self.compile_cache = CompileCache()
         self.stats: list[LaunchStats] = []
+        self.online = None
+        if online_requested():
+            from repro.online import OnlineTuner  # deferred: avoids cycle
+            self.online = OnlineTuner(self, wisdom_dir=wisdom_dir)
 
     # -- pieces ---------------------------------------------------------------
 
@@ -75,6 +93,30 @@ class WisdomKernel:
         self._wisdom = None
         self._selection_cache.clear()
         self.compile_cache.clear()
+
+    def refresh_wisdom(self) -> None:
+        """Re-read wisdom and re-run selection, keeping compiled
+        executables — the hot-swap path for online promotion (the promoted
+        variant is prewarmed, old variants stay valid for forced use)."""
+        self._wisdom = None
+        self._selection_cache.clear()
+
+    def attach_online(self, tuner) -> None:
+        """Attach an online tuning service (see ``repro.online``)."""
+        self.online = tuner
+
+    def prewarm(self, meta: ArgsMeta, config: Config) -> bool:
+        """Compile+cache ``config`` for the scenario described by ``meta``
+        ahead of any launch. Returns True if a compilation happened."""
+        backend = resolve_backend(self._backend)
+        problem = self.builder.get_problem_size(*meta)
+        dtype = self.builder.get_dtype(*meta)
+        key = (self.device_kind, backend, problem, dtype,
+               self.builder.space.freeze(config))
+        fn = self._instantiate(config, meta, backend)
+        _, _, cached = self.compile_cache.get_or_compile(
+            key, lambda: jax.jit(fn).lower(*meta).compile())
+        return not cached
 
     def select_config(self, problem: tuple[int, ...], dtype: str
                       ) -> tuple[Config, str]:
@@ -106,12 +148,22 @@ class WisdomKernel:
             config, tier = self.select_config(problem, dtype)
         else:
             tier = "forced"
+        online = self.online
+        if online is not None and not traced and tier != "forced":
+            trial = online.before_launch(problem, dtype, meta, config, tier)
+            if trial is not None:
+                config, tier = dict(trial), "trial"
         select_s = time.perf_counter() - t_sel0
 
         fn = self._instantiate(config, meta, backend)
 
         if traced:
             # Inside an outer trace: inline; the outer jit owns compilation.
+            # Online tuning still gets to see the (trace-time) selection so
+            # demand from jitted launch streams is tracked; tuning work for
+            # it runs via OnlineTuner.tick(), not launch hooks.
+            if online is not None and tier != "forced":
+                online.observe_traced(problem, dtype, meta, config, tier)
             return fn(*args)
 
         key = (self.device_kind, backend, problem, dtype,
@@ -132,6 +184,8 @@ class WisdomKernel:
             wisdom_read_s=0.0 if cached else self._wisdom_read_s,
             select_s=select_s, compile_s=compile_s, launch_s=launch_s,
             tier=tier, config=dict(config)))
+        if online is not None:
+            online.after_launch(problem, dtype, config, tier, launch_s)
         return out
 
     def _instantiate(self, config: Config, meta, backend: str) -> Callable:

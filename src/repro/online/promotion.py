@@ -1,0 +1,90 @@
+"""Promotion pipeline: bracket winner -> wisdom record -> hot swap.
+
+Once a scenario's successive-halving bracket has a winner, the pipeline
+decides whether it is confidently better than the incumbent (relative margin
+over the incumbent's score, plus a minimum number of live measurements),
+and if so:
+
+1. writes a fresh :class:`~repro.core.wisdom.WisdomRecord` through
+   ``core/wisdom.py`` with ``online`` provenance (``strategy="online"`` and
+   an ``online: true`` marker, so offline re-tuning can tell the two
+   apart and the usual keep-best re-tune semantics apply);
+2. *prewarms* the winning variant in the kernel's compile cache so the hot
+   swap never stalls a live launch on compilation;
+3. refreshes the kernel's wisdom + selection caches (without dropping
+   compiled executables) so the very next launch of the scenario selects
+   the promoted record at tier "exact".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.core.builder import ArgsMeta
+from repro.core.device import get_device
+from repro.core.wisdom import Wisdom, WisdomRecord, make_provenance
+
+DEFAULT_MARGIN = 0.02
+DEFAULT_MIN_MEASUREMENTS = 1
+
+
+@dataclass
+class Promotion:
+    """Outcome of a successful promotion, for logs/benchmarks."""
+    record: WisdomRecord
+    incumbent_score_us: float
+    improvement: float           # fractional, e.g. 0.31 = 31% faster
+
+
+class PromotionPipeline:
+    def __init__(self, kernel, wisdom_dir: Path | str | None = None,
+                 margin: float = DEFAULT_MARGIN,
+                 min_measurements: int = DEFAULT_MIN_MEASUREMENTS):
+        self.kernel = kernel                       # WisdomKernel
+        self.wisdom_dir = (wisdom_dir if wisdom_dir is not None
+                           else kernel.wisdom_dir)
+        self.margin = margin
+        self.min_measurements = min_measurements
+        self.promotions: list[Promotion] = []
+
+    def confident(self, winner_score_us: float, incumbent_score_us: float,
+                  n_measurements: int) -> bool:
+        if n_measurements < self.min_measurements:
+            return False
+        return winner_score_us < incumbent_score_us * (1.0 - self.margin)
+
+    def promote(self, device_kind: str, problem: tuple[int, ...], dtype: str,
+                config: dict, score_us: float, incumbent_score_us: float,
+                n_measurements: int, evals: int, objective: str,
+                meta: ArgsMeta | None = None) -> Promotion | None:
+        """Write + hot-swap if confident; returns the Promotion or None."""
+        if not self.confident(score_us, incumbent_score_us, n_measurements):
+            return None
+        dev = get_device(device_kind)
+        provenance = make_provenance(strategy="online", evals=evals,
+                                     objective=objective)
+        provenance["online"] = True
+        provenance["live_measurements"] = n_measurements
+        record = WisdomRecord(
+            device_kind=dev.kind, device_family=dev.family,
+            problem_size=tuple(int(x) for x in problem), dtype=dtype,
+            config=dict(config), score_us=float(score_us),
+            provenance=provenance)
+        wisdom = Wisdom.load(self.kernel.builder.name, self.wisdom_dir)
+        wisdom.add(record)
+        wisdom.save(self.wisdom_dir)
+
+        # Hot swap: compile the winner first, then flip selection to it.
+        if meta is not None:
+            try:
+                self.kernel.prewarm(meta, record.config)
+            except Exception:  # pragma: no cover — never break serving
+                pass
+        self.kernel.refresh_wisdom()
+
+        promo = Promotion(
+            record=record, incumbent_score_us=incumbent_score_us,
+            improvement=1.0 - score_us / max(incumbent_score_us, 1e-12))
+        self.promotions.append(promo)
+        return promo

@@ -1,0 +1,103 @@
+"""Scenario tracker: turn live launch telemetry into tuning demand.
+
+Every non-traced ``WisdomKernel`` launch reports its scenario (device kind,
+problem size, dtype) and the §4.5 selection tier it resolved to. Tiers below
+"exact" mean the wisdom file had no record tuned for this exact scenario —
+the launch ran on a fuzzy-matched or default configuration. The tracker
+accumulates those misses per scenario and flags a scenario *hot* once its
+miss count crosses the activation threshold, which is the signal for the
+trial scheduler to start spending budget on it.
+
+Traffic-driven by construction: a scenario nobody launches never gets
+tuned, and the busiest untuned scenario becomes hot first.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+ScenarioKey = tuple[str, tuple[int, ...], str]   # (device_kind, problem, dtype)
+
+#: Selection tiers that count as wisdom misses (paper §4.5 tiers 2-5: any
+#: fuzzy device/size/dtype match, and the empty-wisdom default).
+MISS_TIERS = frozenset({
+    "device+dtype", "device", "family+dtype", "family",
+    "any+dtype", "any", "default",
+})
+
+#: Tiers that are *not* tuning demand: an exact record already exists, the
+#: caller forced a config, or the launch was an online trial itself.
+HIT_TIERS = frozenset({"exact", "forced", "trial"})
+
+
+@dataclass
+class ScenarioStats:
+    key: ScenarioKey
+    launches: int = 0          # observed non-traced launches
+    misses: int = 0            # launches that fell through to tiers 2-5
+    trials: int = 0            # launches diverted to candidate configs
+    last_tier: str = ""
+    tiers: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def device_kind(self) -> str:
+        return self.key[0]
+
+    @property
+    def problem(self) -> tuple[int, ...]:
+        return self.key[1]
+
+    @property
+    def dtype(self) -> str:
+        return self.key[2]
+
+
+class ScenarioTracker:
+    """Per-scenario launch/miss accounting with an activation threshold."""
+
+    def __init__(self, activation_threshold: int = 3):
+        self.activation_threshold = activation_threshold
+        self._stats: dict[ScenarioKey, ScenarioStats] = {}
+
+    @staticmethod
+    def key(device_kind: str, problem: tuple[int, ...],
+            dtype: str) -> ScenarioKey:
+        return (device_kind, tuple(int(x) for x in problem), str(dtype))
+
+    def observe(self, device_kind: str, problem: tuple[int, ...], dtype: str,
+                tier: str, weight: int = 1) -> ScenarioStats:
+        """Record one selection. ``weight`` scales the demand: a trace-time
+        selection stands for a whole compiled execution stream, not one
+        launch, so traced observations pass ``weight=activation_threshold``
+        to make the scenario hot immediately."""
+        k = self.key(device_kind, problem, dtype)
+        st = self._stats.get(k)
+        if st is None:
+            st = self._stats[k] = ScenarioStats(key=k)
+        st.launches += 1
+        st.last_tier = tier
+        st.tiers[tier] = st.tiers.get(tier, 0) + 1
+        if tier in MISS_TIERS:
+            st.misses += weight
+        return st
+
+    def is_hot(self, device_kind: str, problem: tuple[int, ...],
+               dtype: str) -> bool:
+        st = self._stats.get(self.key(device_kind, problem, dtype))
+        return st is not None and st.misses >= self.activation_threshold
+
+    def stats(self, device_kind: str, problem: tuple[int, ...],
+              dtype: str) -> ScenarioStats | None:
+        return self._stats.get(self.key(device_kind, problem, dtype))
+
+    def hot_scenarios(self) -> list[ScenarioStats]:
+        """Hot scenarios, busiest first (tuning priority order)."""
+        hot = [s for s in self._stats.values()
+               if s.misses >= self.activation_threshold]
+        return sorted(hot, key=lambda s: -s.misses)
+
+    def all_scenarios(self) -> list[ScenarioStats]:
+        return list(self._stats.values())
+
+    def __len__(self) -> int:
+        return len(self._stats)

@@ -35,7 +35,7 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, n_slots: int = 4,
                  max_seq: int = 512, temperature: float = 0.0,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, online=None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -46,6 +46,18 @@ class ServeEngine:
         self._requests: dict[int, Request] = {}
         self._rng = np.random.default_rng(rng_seed)
         self.steps_run = 0
+        # Optional online autotuner(s) (repro.online.OnlineTuner): each
+        # decode step sponsors one launch-budget slice of background tuning
+        # via tick(). Kernels launched inside the jitted decode report
+        # their scenario at trace time (observe_traced); tick() screens
+        # them and — under the cost-model objective — resolves their
+        # bracket too, since live trials can't be interleaved into a
+        # compiled graph. Promotions land in wisdom for the next trace.
+        if online is None:
+            online = []
+        elif not isinstance(online, (list, tuple)):
+            online = [online]
+        self.online = list(online)
 
     def submit(self, req: Request) -> bool:
         ok = self.batcher.submit(req.request_id, len(req.prompt),
@@ -78,6 +90,8 @@ class ServeEngine:
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(next_tok))
             self.steps_run += 1
+            for svc in self.online:
+                svc.tick()
             sampled = self._sample(np.asarray(logits[:, 0]))
             for slot, req in reqs.items():
                 if done[slot]:

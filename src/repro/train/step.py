@@ -37,13 +37,25 @@ def _split_micro(batch: dict, n: int) -> dict:
 
 def make_train_step(model, optimizer: AdamW,
                     microbatches: int = 1,
-                    accum_dtype=jnp.float32) -> Callable:
+                    accum_dtype=jnp.float32,
+                    online=None, online_warmup_steps: int = 20) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
     ``accum_dtype``: gradient-accumulator dtype. bf16 halves accumulator
     memory and any gradient-sided collective traffic at a small noise cost
     (per-micro grads are still computed at full precision and summed).
+
+    ``online``: optional ``repro.online.OnlineTuner`` (or list of them).
+    During the first ``online_warmup_steps`` *eager* steps — warmup, before
+    the loop is wrapped in an outer jit — each step sponsors one
+    launch-budget slice of background tuning so kernel configs settle
+    before the steady-state compiled loop is traced. Inside a jit the hook
+    is a trace-time no-op.
     """
+    if online is None:
+        online = []
+    elif not isinstance(online, (list, tuple)):
+        online = [online]
 
     def loss_fn(params, mb):
         loss, metrics = model.loss(params, mb)
@@ -76,6 +88,11 @@ def make_train_step(model, optimizer: AdamW,
         return grads, metrics
 
     def train_step(state: TrainState, batch: dict):
+        step = state["step"]
+        if (online and not isinstance(step, jax.core.Tracer)
+                and int(step) < online_warmup_steps):
+            for svc in online:
+                svc.tick()
         grads, metrics = accumulate(state["params"], batch)
         params, opt, opt_metrics = optimizer.update(grads, state["opt"],
                                                     state["params"])

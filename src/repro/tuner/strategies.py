@@ -98,6 +98,9 @@ class _Session:
             self.best = ev
         return ev
 
+    def feasible(self) -> list[Evaluation]:
+        return [e for e in self.evals if e.feasible]
+
     def result(self, strategy: str) -> TuningResult:
         return TuningResult(
             strategy=strategy,

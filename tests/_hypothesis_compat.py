@@ -1,0 +1,167 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` package.
+
+The test suite uses a small slice of hypothesis (``@given`` with keyword or
+positional strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``floats`` / ``booleans`` / ``sampled_from`` / ``lists`` /
+``tuples`` / ``data`` strategies).  When the real package is installed it is
+used untouched; on a clean environment ``conftest.py`` installs this module
+as ``sys.modules["hypothesis"]`` so collection and execution still work.
+
+Unlike real hypothesis there is no shrinking and no adaptive generation:
+each test simply runs ``max_examples`` times with examples drawn from a
+seeded ``numpy`` generator, so failures reproduce exactly across runs.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import types
+
+import numpy as np
+
+__version__ = "0.0-compat"
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+def _seed(name: str, example_idx: int) -> int:
+    h = hashlib.sha256(f"{name}:{example_idx}".encode()).digest()
+    return int.from_bytes(h[:8], "little")
+
+
+class SearchStrategy:
+    def __init__(self, draw, label=""):
+        self._draw = draw
+        self._label = label
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):  # pragma: no cover
+        return f"SearchStrategy({self._label})"
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value}, {max_value})")
+
+
+def floats(min_value, max_value, **_):
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        f"floats({min_value}, {max_value})")
+
+
+def booleans():
+    return SearchStrategy(lambda rng: bool(rng.integers(2)), "booleans()")
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[int(rng.integers(len(elements)))],
+        "sampled_from")
+
+
+def tuples(*strategies):
+    return SearchStrategy(
+        lambda rng: tuple(s.example(rng) for s in strategies), "tuples")
+
+
+def lists(elements, min_size=0, max_size=10, unique=False):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        out, seen = [], set()
+        tries = 0
+        while len(out) < n and tries < 1000:
+            x = elements.example(rng)
+            tries += 1
+            if unique:
+                key = x if isinstance(x, (int, float, str, bool, tuple)) \
+                    else repr(x)
+                if key in seen:
+                    continue
+                seen.add(key)
+            out.append(x)
+        return out
+
+    return SearchStrategy(draw, "lists")
+
+
+class DataObject:
+    """Interactive draw, as returned by the ``st.data()`` strategy."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.example(self._rng)
+
+
+def data():
+    return SearchStrategy(lambda rng: DataObject(rng), "data()")
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        def wrapper():
+            n = getattr(wrapper, "_compat_max_examples",
+                        getattr(fn, "_compat_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            name = f"{fn.__module__}.{fn.__qualname__}"
+            for i in range(n):
+                rng = np.random.default_rng(_seed(name, i))
+                args = [s.example(rng) for s in arg_strategies]
+                kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception:
+                    print(f"falsifying example ({name}, #{i}): "
+                          f"args={args} kwargs={kwargs}")
+                    raise
+
+        # NOTE: deliberately no functools.wraps/__wrapped__ — pytest must see
+        # a zero-argument signature, not the strategy parameters (it would
+        # try to resolve them as fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def decorate(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied("assumption not satisfied")
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+class HealthCheck:  # pragma: no cover — accessed by name only
+    all = classmethod(lambda cls: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name, _obj in (("integers", integers), ("floats", floats),
+                    ("booleans", booleans), ("sampled_from", sampled_from),
+                    ("tuples", tuples), ("lists", lists), ("data", data),
+                    ("SearchStrategy", SearchStrategy),
+                    ("DataObject", DataObject)):
+    setattr(strategies, _name, _obj)

@@ -1,8 +1,23 @@
+import importlib.util
 import os
+import pathlib
 import sys
 
 # tests must see exactly ONE device (the dry-run sets 512 itself)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Several test modules use hypothesis property tests. On environments where
+# the real package is unavailable, install the deterministic compatibility
+# shim under the same import name *before* collection imports the modules.
+try:  # pragma: no cover — depends on the environment
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _shim_path = pathlib.Path(__file__).with_name("_hypothesis_compat.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _shim_path)
+    _shim = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _shim
+    _spec.loader.exec_module(_shim)
+    sys.modules["hypothesis.strategies"] = _shim.strategies
 
 import numpy as np
 import pytest

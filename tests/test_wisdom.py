@@ -4,6 +4,7 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Wisdom, WisdomRecord, make_provenance
+from repro.core.wisdom import _distance
 
 
 def rec(device="tpu-v5e", family="tpu-v5", problem=(256, 256, 256),
@@ -75,9 +76,95 @@ def test_same_device_selection_minimizes_distance(probs, query):
     for i, p in enumerate(probs):
         w.add(rec(problem=p, config={"i": i}, score=1.0))
     cfg, tier = w.select("tpu-v5e", query, "float32", {"i": -1})
-    dists = [np.hypot(p[0] - query[0], p[1] - query[1]) for p in probs]
+    dists = [_distance(p, query) for p in probs]
     best = int(np.argmin(dists))
     assert cfg["i"] == best or dists[cfg["i"]] == dists[best]
+
+
+def test_distance_is_scale_normalized():
+    """A small relative change on a huge axis must not drown out a large
+    relative change on a small axis (the tier 2-4 regression)."""
+    query = (1024, 64)
+    w = Wisdom("k")
+    w.add(rec(problem=(1024, 8), config={"c": "small-axis-8x"}))
+    w.add(rec(problem=(1100, 64), config={"c": "big-axis-7pct"}))
+    cfg, tier = w.select("tpu-v5e", query, "float32", {"c": "default"})
+    # raw Euclidean would pick the 8x-different small axis (|d|=56 vs 76);
+    # normalized distance prefers the 7% change on the big axis.
+    assert cfg["c"] == "big-axis-7pct"
+    assert _distance((1024, 8), query) > _distance((1100, 64), query)
+
+
+# --------------------- §4.5 fallback chain, tier by tier ---------------------
+
+DEFAULT = {"c": "default"}
+
+
+def _tier_wisdom():
+    """One record per tier-discriminating scenario component."""
+    w = Wisdom("k")
+    w.add(rec(device="tpu-v5e", family="tpu-v5", problem=(256, 256),
+              dtype="float32", config={"c": "exact"}))
+    w.add(rec(device="tpu-v5e", family="tpu-v5", problem=(128, 128),
+              dtype="float32", config={"c": "dev-dtype"}))
+    w.add(rec(device="tpu-v5e", family="tpu-v5", problem=(64, 64),
+              dtype="bfloat16", config={"c": "dev-other-dtype"}))
+    w.add(rec(device="tpu-v5p", family="tpu-v5", problem=(64, 64),
+              dtype="float16", config={"c": "family"}))
+    w.add(rec(device="tpu-v4", family="tpu-v4", problem=(64, 64),
+              dtype="float16", config={"c": "any"}))
+    return w
+
+
+def test_tier1_exact():
+    cfg, tier = _tier_wisdom().select("tpu-v5e", (256, 256), "float32",
+                                      DEFAULT)
+    assert (tier, cfg["c"]) == ("exact", "exact")
+
+
+def test_tier2_same_device_closest_size():
+    cfg, tier = _tier_wisdom().select("tpu-v5e", (130, 130), "float32",
+                                      DEFAULT)
+    assert (tier, cfg["c"]) == ("device+dtype", "dev-dtype")
+
+
+def test_tier2b_same_device_any_dtype():
+    cfg, tier = _tier_wisdom().select("tpu-v5e", (64, 64), "float64",
+                                      DEFAULT)
+    assert (tier, cfg["c"]) == ("device", "dev-other-dtype")
+
+
+def test_tier3_family():
+    # no tpu-v5e records at all, but a sibling tpu-v5p (family tpu-v5) one
+    w = Wisdom("k")
+    w.add(rec(device="tpu-v5p", family="tpu-v5", problem=(64, 64),
+              dtype="float16", config={"c": "family"}))
+    w.add(rec(device="tpu-v4", family="tpu-v4", problem=(64, 64),
+              dtype="float16", config={"c": "any"}))
+    cfg, tier = w.select("tpu-v5e", (64, 64), "float16", DEFAULT)
+    assert (tier, cfg["c"]) == ("family+dtype", "family")
+
+
+def test_tier3b_family_any_dtype():
+    w = Wisdom("k")
+    w.add(rec(device="tpu-v5p", family="tpu-v5", problem=(64, 64),
+              dtype="float16", config={"c": "family"}))
+    cfg, tier = w.select("tpu-v5e", (64, 64), "int8", DEFAULT)
+    assert (tier, cfg["c"]) == ("family", "family")
+
+
+def test_tier4_any_record():
+    cfg, tier = _tier_wisdom().select("gpu-h100", (64, 64), "float16",
+                                      DEFAULT)
+    assert tier == "any+dtype" and cfg["c"] in ("family", "any")
+    cfg, tier = _tier_wisdom().select("gpu-h100", (64, 64), "int8", DEFAULT)
+    assert tier == "any"
+
+
+def test_tier5_empty_wisdom_default():
+    cfg, tier = Wisdom("k-empty").select("tpu-v5e", (256, 256), "float32",
+                                         DEFAULT)
+    assert (tier, cfg) == ("default", DEFAULT)
 
 
 @settings(max_examples=40, deadline=None)
