@@ -4,6 +4,12 @@ A wisdom file is a human-readable JSON document per kernel holding one record
 per tuning session: the best configuration found for one (device, problem
 size, dtype) *scenario*, plus provenance. Re-tuning appends/refreshes records.
 
+Beyond the paper, the format is *versioned* (``WISDOM_VERSION``, with a
+migration path for old files and a loud refusal of files from the future)
+and each record carries a *lineage*: the provenance blocks of every record
+it superseded, locally or during a fleet merge (``repro.distrib``). See
+``docs/wisdom-format.md`` for the field-by-field schema.
+
 Selection heuristic — the paper's §4.5 list, extended with dtype as a
 scenario component (our precision analogue of the paper's float/double):
 
@@ -18,6 +24,7 @@ from __future__ import annotations
 
 import datetime
 import getpass
+import hashlib
 import json
 import math
 import os
@@ -31,8 +38,22 @@ import jax
 
 from .device import get_device
 
-WISDOM_VERSION = 1
+#: Current on-disk schema version. v1: unversioned-or-``version: 1`` files
+#: without lineage; v2 adds per-record ``lineage`` (provenance history).
+WISDOM_VERSION = 2
 WISDOM_DIR_ENV = "KERNEL_LAUNCHER_WISDOM_DIR"
+
+#: Lineage entries kept per record after a merge (oldest dropped first).
+LINEAGE_MAX = 16
+
+
+class WisdomVersionError(ValueError):
+    """A wisdom file declares a schema version this build cannot handle.
+
+    Raised for files from the *future* (version > ``WISDOM_VERSION``):
+    silently dropping or partially reading them could discard or corrupt
+    fleet tuning results, so loading refuses loudly instead.
+    """
 
 
 def default_wisdom_dir() -> Path:
@@ -41,21 +62,62 @@ def default_wisdom_dir() -> Path:
 
 def make_provenance(strategy: str = "", evals: int = 0,
                     objective: str = "") -> dict:
-    """Provenance block stored with each record (paper §4.4)."""
+    """Provenance block stored with each record (paper §4.4).
+
+    Every host lookup degrades to ``"unknown"`` instead of raising:
+    sandboxed containers routinely lack a passwd entry (``getpass``), a
+    resolvable hostname (``socket``), or readable platform metadata, and a
+    wisdom write must never crash over missing provenance cosmetics.
+    """
     try:
         user = getpass.getuser()
     except Exception:  # pragma: no cover
         user = "unknown"
+    try:
+        host = socket.gethostname()
+    except Exception:  # pragma: no cover
+        host = "unknown"
+    try:
+        plat = platform.platform()
+    except Exception:  # pragma: no cover
+        plat = "unknown"
     return {
         "date": datetime.datetime.now(datetime.timezone.utc).isoformat(),
-        "host": socket.gethostname(),
+        "host": host,
         "user": user,
-        "platform": platform.platform(),
+        "platform": plat,
         "jax_version": jax.__version__,
         "strategy": strategy,
         "evaluations": evals,
         "objective": objective,
     }
+
+
+def merge_lineage(*records: "WisdomRecord", extra: Sequence[dict] = ()
+                  ) -> list[dict]:
+    """Combine the provenance history of ``records`` into one lineage list.
+
+    Collects every record's own provenance plus its existing lineage,
+    deduplicates, orders chronologically (ties broken by canonical JSON so
+    the result is identical regardless of merge order), and keeps the most
+    recent ``LINEAGE_MAX`` entries.
+    """
+    entries: list[dict] = []
+    for r in records:
+        if r.provenance:
+            entries.append(dict(r.provenance))
+        entries.extend(dict(e) for e in r.lineage)
+    entries.extend(dict(e) for e in extra)
+    seen: set[str] = set()
+    unique: list[dict] = []
+    for e in entries:
+        key = json.dumps(e, sort_keys=True)
+        if key not in seen:
+            seen.add(key)
+            unique.append(e)
+    unique.sort(key=lambda e: (str(e.get("date", "")),
+                               json.dumps(e, sort_keys=True)))
+    return unique[-LINEAGE_MAX:]
 
 
 @dataclass
@@ -67,6 +129,9 @@ class WisdomRecord:
     config: dict[str, Any]
     score_us: float                      # best objective value (lower=better)
     provenance: dict = field(default_factory=dict)
+    #: Provenance blocks of records this one superseded (re-tune keep-best,
+    #: fleet merge). Chronological, capped at LINEAGE_MAX. Schema v2.
+    lineage: list[dict] = field(default_factory=list)
 
     def to_json(self) -> dict:
         d = asdict(self)
@@ -83,10 +148,44 @@ class WisdomRecord:
             config=dict(d["config"]),
             score_us=float(d["score_us"]),
             provenance=dict(d.get("provenance", {})),
+            lineage=[dict(e) for e in d.get("lineage", [])],
         )
 
     def scenario(self) -> tuple:
         return (self.device_kind, self.problem_size, self.dtype)
+
+    def evaluations(self) -> int:
+        """Tuning-effort weight used for statistical tie-breaks in merges."""
+        try:
+            return int(self.provenance.get("evaluations", 0))
+        except (TypeError, ValueError):
+            return 0
+
+    def record_id(self) -> str:
+        """Stable content identity of this tuning result.
+
+        Hash of scenario + config + score + provenance (lineage excluded:
+        two hosts holding the same result with different merge histories
+        still refer to the same record). Used for cross-store deduplication
+        and as the last, fully deterministic merge tie-break. Cached — the
+        identity fields are never mutated after construction (only
+        ``lineage`` is, and it does not participate).
+        """
+        cached = self.__dict__.get("_record_id")
+        if cached is not None:
+            return cached
+        body = json.dumps({
+            "device_kind": self.device_kind,
+            "device_family": self.device_family,
+            "problem_size": list(self.problem_size),
+            "dtype": self.dtype,
+            "config": self.config,
+            "score_us": self.score_us,
+            "provenance": self.provenance,
+        }, sort_keys=True)
+        rid = hashlib.sha256(body.encode()).hexdigest()[:16]
+        self.__dict__["_record_id"] = rid
+        return rid
 
 
 def _distance(a: Sequence[int], b: Sequence[int]) -> float:
@@ -105,6 +204,39 @@ def _distance(a: Sequence[int], b: Sequence[int]) -> float:
     b = tuple(b) + (1,) * (n - len(b))
     return math.sqrt(sum(
         math.log2(max(x, 1) / max(y, 1)) ** 2 for x, y in zip(a, b)))
+
+
+def doc_version(doc: dict) -> int:
+    """Schema version a wisdom document declares (pre-versioning files
+    count as v1)."""
+    try:
+        return int(doc.get("version", 1))
+    except (TypeError, ValueError):
+        raise WisdomVersionError(
+            f"wisdom document declares non-integer version "
+            f"{doc.get('version')!r}") from None
+
+
+def migrate_doc(doc: dict, source: str = "<memory>") -> dict:
+    """Migrate a wisdom document to the current ``WISDOM_VERSION``.
+
+    Returns a new document (the input is not mutated). v1 -> v2 adds the
+    empty per-record ``lineage`` list. Documents from a *newer* schema
+    raise :class:`WisdomVersionError` — refusing loudly beats silently
+    dropping fields a future writer considered essential.
+    """
+    version = doc_version(doc)
+    if version > WISDOM_VERSION:
+        raise WisdomVersionError(
+            f"wisdom document {source} has version {version}, but this "
+            f"build understands at most {WISDOM_VERSION}; upgrade before "
+            f"loading it (records were NOT read)")
+    out = json.loads(json.dumps(doc))     # deep copy, JSON-clean
+    if version < 2:
+        for rec in out.get("records", []):
+            rec.setdefault("lineage", [])
+    out["version"] = WISDOM_VERSION
+    return out
 
 
 class Wisdom:
@@ -129,24 +261,31 @@ class Wisdom:
             return Wisdom(kernel_name)
         with open(path) as f:
             doc = json.load(f)
+        if not isinstance(doc, dict):
+            raise ValueError(
+                f"wisdom file {path} is not a JSON object "
+                f"(got {type(doc).__name__})")
         if doc.get("kernel") != kernel_name:
             raise ValueError(
                 f"wisdom file {path} is for kernel {doc.get('kernel')!r}, "
                 f"not {kernel_name!r}")
+        doc = migrate_doc(doc, source=str(path))
         recs = [WisdomRecord.from_json(r) for r in doc.get("records", [])]
         return Wisdom(kernel_name, recs)
 
-    def save(self, wisdom_dir: Path | str | None = None) -> Path:
-        path = Wisdom.path_for(self.kernel_name, wisdom_dir)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        doc = {
+    def to_doc(self) -> dict:
+        return {
             "kernel": self.kernel_name,
             "version": WISDOM_VERSION,
             "records": [r.to_json() for r in self.records],
         }
+
+    def save(self, wisdom_dir: Path | str | None = None) -> Path:
+        path = Wisdom.path_for(self.kernel_name, wisdom_dir)
+        path.parent.mkdir(parents=True, exist_ok=True)
         tmp = path.with_suffix(".tmp")
         with open(tmp, "w") as f:
-            json.dump(doc, f, indent=2, sort_keys=True)
+            json.dump(self.to_doc(), f, indent=2, sort_keys=True)
         os.replace(tmp, path)  # atomic
         return path
 
@@ -154,12 +293,23 @@ class Wisdom:
 
     def add(self, record: WisdomRecord, keep_best: bool = True) -> None:
         """Add a tuning result. If a record for the same scenario exists and
-        ``keep_best``, keep whichever scored better (re-tuning semantics)."""
+        ``keep_best``, keep whichever scored better (re-tuning semantics);
+        the survivor absorbs both records' provenance into its lineage."""
         if keep_best:
             for i, r in enumerate(self.records):
                 if r.scenario() == record.scenario():
-                    if record.score_us < r.score_us:
-                        self.records[i] = record
+                    if r.record_id() == record.record_id():
+                        # Same result re-added (e.g. a sync echo): pool
+                        # lineages only, keep re-adds a no-op otherwise.
+                        if record.lineage != r.lineage:
+                            r.lineage = merge_lineage(
+                                extra=[*r.lineage, *record.lineage])
+                        return
+                    winner, loser = ((record, r)
+                                     if record.score_us < r.score_us
+                                     else (r, record))
+                    winner.lineage = merge_lineage(winner, loser)
+                    self.records[i] = winner
                     return
         self.records.append(record)
 

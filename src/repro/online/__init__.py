@@ -1,6 +1,7 @@
 """Online autotuning: traffic-driven tuning with live wisdom promotion.
 
-The paper's workflow is strictly offline — capture a launch, tune it
+Beyond-paper subsystem (builds on §4.4 wisdom files and the §4.5
+selection heuristic). The paper's workflow is strictly offline — capture a launch, tune it
 out-of-band, ship the wisdom file (§4.2-§4.4). Any scenario not tuned ahead
 of time falls through the §4.5 selection heuristic to a fuzzy match or the
 default config, forever. This subsystem turns those wisdom *misses* into

@@ -1,6 +1,9 @@
 """Per-launch overhead budget for the online autotuning service.
 
-Online tuning must never turn a serving hot path into a tuning session: all
+Beyond-paper (the paper's §4.3 tuning runs out-of-band with a 15-minute
+budget; online work rides the serving path, so the budget is per launch
+and three orders of magnitude smaller). Online tuning must never turn a
+serving hot path into a tuning session: all
 background work the service does on behalf of one launch (cost-model
 screening, bracket bookkeeping, promotion checks) is bounded by a *hard*
 wall-clock budget per launch plus a deterministic cap on the number of

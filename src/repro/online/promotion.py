@@ -1,5 +1,7 @@
 """Promotion pipeline: bracket winner -> wisdom record -> hot swap.
 
+Beyond-paper (writes standard §4.4 wisdom records, so offline tooling
+and the fleet merge engine treat promotions like any tuning session).
 Once a scenario's successive-halving bracket has a winner, the pipeline
 decides whether it is confidently better than the incumbent (relative margin
 over the incumbent's score, plus a minimum number of live measurements),
@@ -13,7 +15,12 @@ and if so:
    swap never stalls a live launch on compilation;
 3. refreshes the kernel's wisdom + selection caches (without dropping
    compiled executables) so the very next launch of the scenario selects
-   the promoted record at tier "exact".
+   the promoted record at tier "exact";
+4. optionally *broadcasts* the record to the fleet through a
+   ``repro.distrib`` push hook (beyond-paper: §4.4 wisdom as a fleet
+   asset), so other hosts learn the winner without re-tuning. Broadcast
+   failures are swallowed — fleet distribution is best-effort, the local
+   write is the source of truth.
 """
 
 from __future__ import annotations
@@ -40,13 +47,29 @@ class Promotion:
 class PromotionPipeline:
     def __init__(self, kernel, wisdom_dir: Path | str | None = None,
                  margin: float = DEFAULT_MARGIN,
-                 min_measurements: int = DEFAULT_MIN_MEASUREMENTS):
+                 min_measurements: int = DEFAULT_MIN_MEASUREMENTS,
+                 broadcast=None):
         self.kernel = kernel                       # WisdomKernel
         self.wisdom_dir = (wisdom_dir if wisdom_dir is not None
                            else kernel.wisdom_dir)
         self.margin = margin
         self.min_measurements = min_measurements
+        #: Fleet hook: a ``repro.distrib.PushSync`` (or any object with
+        #: ``broadcast(kernel_name, record)``), or a bare callable taking
+        #: the same two arguments. None = local-only (the paper's model).
+        self.broadcast = broadcast
+        self.broadcasts = 0
         self.promotions: list[Promotion] = []
+
+    def _broadcast(self, record: WisdomRecord) -> None:
+        if self.broadcast is None:
+            return
+        fn = getattr(self.broadcast, "broadcast", self.broadcast)
+        try:
+            fn(self.kernel.builder.name, record)
+            self.broadcasts += 1
+        except Exception:  # pragma: no cover — never break serving
+            pass
 
     def confident(self, winner_score_us: float, incumbent_score_us: float,
                   n_measurements: int) -> bool:
@@ -74,6 +97,7 @@ class PromotionPipeline:
         wisdom = Wisdom.load(self.kernel.builder.name, self.wisdom_dir)
         wisdom.add(record)
         wisdom.save(self.wisdom_dir)
+        self._broadcast(record)
 
         # Hot swap: compile the winner first, then flip selection to it.
         if meta is not None:

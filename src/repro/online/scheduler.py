@@ -1,6 +1,7 @@
 """Trial scheduler: budgeted candidate search for one hot scenario.
 
-Two channels, matching the ``CostModelEvaluator`` / ``WallClockEvaluator``
+Beyond-paper (the online analogue of the §4.3 search strategies). Two
+channels, matching the ``CostModelEvaluator`` / ``WallClockEvaluator``
 split in the offline tuner:
 
 * **Screening** (background, charged to the per-launch overhead budget):

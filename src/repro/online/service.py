@@ -1,6 +1,8 @@
 """Online autotuning service — the facade wired into ``WisdomKernel``.
 
-The offline flow (capture -> tune out-of-band -> ship wisdom) cannot cover
+Beyond-paper (closes the loop the paper leaves open between §4.2 capture
+and §4.5 selection). The offline flow (capture -> tune out-of-band ->
+ship wisdom) cannot cover
 scenarios nobody anticipated; they silently run on fuzzy-matched or default
 configs forever. ``OnlineTuner`` closes that gap with live traffic:
 
@@ -105,7 +107,8 @@ class OnlineTuner:
                  activation_threshold: int = 3,
                  pool_size: int = 128, bracket_size: int = 8,
                  margin: float = 0.02, min_measurements: int = 1,
-                 wisdom_dir: Path | str | None = None):
+                 wisdom_dir: Path | str | None = None,
+                 broadcast=None):
         if objective not in ("costmodel", "wallclock"):
             raise ValueError(f"unknown objective {objective!r}")
         self.kernel = kernel
@@ -125,7 +128,8 @@ class OnlineTuner:
         self.tracker = ScenarioTracker(activation_threshold)
         self.pipeline = PromotionPipeline(kernel, wisdom_dir=wisdom_dir,
                                           margin=margin,
-                                          min_measurements=min_measurements)
+                                          min_measurements=min_measurements,
+                                          broadcast=broadcast)
         self.meter = OverheadMeter()
         self.events: list[tuple[str, ScenarioKey, Any]] = []
         self._states: dict[ScenarioKey, _ScenarioState] = {}
@@ -308,6 +312,7 @@ class OnlineTuner:
             "active": sum(1 for s in self._states.values()
                           if not s.finished),
             "promotions": len(self.pipeline.promotions),
+            "broadcasts": self.pipeline.broadcasts,
             "launches": self.meter.launches,
             "trials": self.meter.trials,
             "screens": self.meter.screens,

@@ -1,6 +1,7 @@
 """Scenario tracker: turn live launch telemetry into tuning demand.
 
-Every non-traced ``WisdomKernel`` launch reports its scenario (device kind,
+Beyond-paper (consumes the §4.5 selection tiers; the paper has no
+runtime feedback loop). Every non-traced ``WisdomKernel`` launch reports its scenario (device kind,
 problem size, dtype) and the §4.5 selection tier it resolved to. Tiers below
 "exact" mean the wisdom file had no record tuned for this exact scenario —
 the launch ran on a fuzzy-matched or default configuration. The tracker

@@ -35,7 +35,7 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, n_slots: int = 4,
                  max_seq: int = 512, temperature: float = 0.0,
-                 rng_seed: int = 0, online=None):
+                 rng_seed: int = 0, online=None, sync=None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -58,6 +58,12 @@ class ServeEngine:
         elif not isinstance(online, (list, tuple)):
             online = [online]
         self.online = list(online)
+        # Optional fleet wisdom pull (repro.distrib.PullSync): tick() is
+        # called once per decode step and actually pulls every
+        # sync.interval ticks, merging fleet wisdom into the local store
+        # and hot-refreshing attached kernels — this host serves with the
+        # whole fleet's tuning results, not just its own.
+        self.sync = sync
 
     def submit(self, req: Request) -> bool:
         ok = self.batcher.submit(req.request_id, len(req.prompt),
@@ -92,6 +98,8 @@ class ServeEngine:
             self.steps_run += 1
             for svc in self.online:
                 svc.tick()
+            if self.sync is not None:
+                self.sync.tick()
             sampled = self._sample(np.asarray(logits[:, 0]))
             for slot, req in reqs.items():
                 if done[slot]:

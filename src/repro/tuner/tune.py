@@ -23,8 +23,9 @@ import numpy as np
 from repro.core.builder import KernelBuilder
 from repro.core.capture import load_capture
 from repro.core.registry import get_kernel
-from repro.core.wisdom import Wisdom, WisdomRecord, make_provenance
+from repro.core.wisdom import WisdomRecord, make_provenance
 from repro.core.device import get_device
+from repro.distrib.store import WisdomStore
 
 from .runner import CostModelEvaluator, WallClockEvaluator
 from .strategies import STRATEGIES, TuningResult
@@ -43,8 +44,14 @@ def tune_kernel(builder: KernelBuilder, problem: tuple[int, ...], dtype: str,
                 objective: str = "costmodel",
                 wisdom_dir: Path | str | None = None,
                 write_wisdom: bool = True,
-                seed: int = 0) -> TuningResult:
-    """Tune one scenario; optionally record the winner in the wisdom file."""
+                seed: int = 0,
+                store: WisdomStore | None = None) -> TuningResult:
+    """Tune one scenario; optionally record the winner in the wisdom file.
+
+    Writes go through a :class:`~repro.distrib.WisdomStore` (``store``
+    wins over ``wisdom_dir``): tuning output gets the same schema
+    versioning/migration guarantees the fleet sync layer relies on.
+    """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; "
                          f"have {sorted(STRATEGIES)}")
@@ -66,7 +73,9 @@ def tune_kernel(builder: KernelBuilder, problem: tuple[int, ...], dtype: str,
                                   time_budget_s=time_budget_s)
     if write_wisdom and result.best_config is not None:
         dev = get_device(device_kind)
-        wisdom = Wisdom.load(builder.name, wisdom_dir)
+        if store is None:
+            store = WisdomStore(wisdom_dir)
+        wisdom = store.load(builder.name)
         wisdom.add(WisdomRecord(
             device_kind=dev.kind, device_family=dev.family,
             problem_size=tuple(problem), dtype=dtype,
@@ -74,7 +83,7 @@ def tune_kernel(builder: KernelBuilder, problem: tuple[int, ...], dtype: str,
             provenance=make_provenance(strategy=strategy,
                                        evals=len(result.evaluations),
                                        objective=objective)))
-        wisdom.save(wisdom_dir)
+        store.save(wisdom)
     return result
 
 
@@ -84,14 +93,16 @@ def tune_capture(capture_path: Path | str, device_kind: str,
                  time_budget_s: float | None = DEFAULT_TIME_BUDGET_S,
                  objective: str = "costmodel",
                  wisdom_dir: Path | str | None = None,
-                 seed: int = 0) -> TuningResult:
+                 seed: int = 0,
+                 store: WisdomStore | None = None) -> TuningResult:
     """Replay a captured launch through the tuner (paper §4.2/§4.3)."""
     cap = load_capture(capture_path)
     builder = get_kernel(cap.kernel_name)
     return tune_kernel(builder, cap.problem_size, cap.dtype, device_kind,
                        strategy=strategy, max_evals=max_evals,
                        time_budget_s=time_budget_s, verify_args=cap.args,
-                       objective=objective, wisdom_dir=wisdom_dir, seed=seed)
+                       objective=objective, wisdom_dir=wisdom_dir, seed=seed,
+                       store=store)
 
 
 def main(argv: list[str] | None = None) -> int:

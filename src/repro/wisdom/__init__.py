@@ -1,0 +1,11 @@
+"""``repro.wisdom`` — the operator entry point for wisdom stores.
+
+``python -m repro.wisdom <subcommand>`` manages the wisdom directories the
+runtime reads (§4.4) and the fleet distribution layer syncs
+(``repro.distrib``). The implementation lives in ``repro.distrib.cli``;
+this package only provides the memorable module path.
+"""
+
+from repro.distrib.cli import build_parser, main
+
+__all__ = ["build_parser", "main"]

@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown link whose target is a repo-relative path (http(s)
+and mailto links are skipped; #anchors are stripped) and exits non-zero
+listing each target that does not exist. Run from anywhere:
+
+    python tools/check_docs_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: Path) -> list[Path]:
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check(root: Path) -> list[str]:
+    errors = []
+    for md in doc_files(root):
+        for n, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    errors.append(f"{md.relative_to(root)}:{n}: "
+                                  f"broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors = check(root)
+    for e in errors:
+        print(e)
+    n_files = len(doc_files(root))
+    print(f"checked {n_files} file(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
