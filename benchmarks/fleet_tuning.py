@@ -1,0 +1,54 @@
+"""Fleet tuning: N-worker shard parallelism at equal eval budget.
+
+Runs the deterministic in-process fleet (``run_local_fleet``) over the
+same seeded demand with 1 and N workers. Both runs execute the identical
+shard set (sharding is fixed by the job spec, not the worker count), so
+the total evaluation budget is equal by construction; the speedup is the
+critical-path ratio: evaluations done by the busiest worker, the
+simulated-parallelism analogue of wall time when every worker is a real
+host. Asserts N workers beat one (the whole point of sharding) and that
+both runs assemble byte-identical fleet wisdom (sharding must not change
+the answer).
+
+CSV: workers, jobs, shards_per_job, total_evals, makespan_evals,
+speedup_vs_1, wisdom_identical.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.fleet import run_local_fleet
+
+from .common import csv_row
+
+WORKER_COUNTS = (1, 2, 3)
+N_SHARDS = 6
+
+
+def _fleet(n_workers: int):
+    return run_local_fleet(n_workers=n_workers, n_shards=N_SHARDS,
+                           strategy="exhaustive", seed=0)
+
+
+def run():
+    yield csv_row("fleet_tuning", "workers", "jobs", "shards_per_job",
+                  "total_evals", "makespan_evals", "speedup_vs_1",
+                  "wisdom_identical")
+    base = _fleet(1)
+    base_doc = json.dumps(base.wisdom_docs, sort_keys=True)
+    assert base.makespan_evals == base.total_evals
+    for n in WORKER_COUNTS:
+        report = base if n == 1 else _fleet(n)
+        identical = (json.dumps(report.wisdom_docs, sort_keys=True)
+                     == base_doc)
+        assert identical, f"{n}-worker wisdom diverged from 1-worker"
+        assert report.total_evals == base.total_evals, \
+            f"{n}-worker run changed the eval budget"
+        speedup = base.makespan_evals / max(report.makespan_evals, 1)
+        if n > 1:
+            assert speedup > 1.2, \
+                f"{n} workers gave no shard parallelism ({speedup:.2f}x)"
+        yield csv_row("fleet_tuning", n, len(report.jobs_assembled),
+                      N_SHARDS, report.total_evals, report.makespan_evals,
+                      f"{speedup:.2f}", int(identical))

@@ -8,6 +8,8 @@
   Fig 5    -> overhead           (first vs cached launch breakdown)
   (ours)   -> online_convergence (traffic-driven tuning: launches to reach
                                   5% of the offline optimum)
+  (ours)   -> fleet_tuning       (N-worker shard parallelism at equal eval
+                                  budget; byte-identical assembled wisdom)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 """
@@ -19,7 +21,8 @@ import time
 
 
 MODULES = ("capture_bench", "distribution", "tuning_session",
-           "portability", "ppm", "overhead", "online_convergence")
+           "portability", "ppm", "overhead", "online_convergence",
+           "fleet_tuning")
 
 
 def main() -> None:

@@ -9,7 +9,9 @@ Launcher / Kernel Tuner use. Restrictions may be Python callables
 
 from __future__ import annotations
 
+import hashlib
 import itertools
+import json
 import math
 from dataclasses import dataclass
 from typing import Any, Callable, Iterator, Sequence
@@ -190,6 +192,45 @@ class ConfigSpace:
     def freeze(self, config: Config) -> tuple:
         """Hashable canonical form of a config."""
         return tuple((k, config[k]) for k in self._params)
+
+    # -- sharding (fleet job partitioning) -----------------------------------
+
+    def config_hash(self, config: Config) -> int:
+        """Stable 64-bit hash of a config's canonical JSON form.
+
+        ``hash()`` is process-randomized; shard membership must agree
+        between the coordinator that planned a job and every worker that
+        claims one of its shards, across processes, hosts and runs.
+        """
+        body = json.dumps([[k, config[k]] for k in self._params],
+                          default=str)
+        return int.from_bytes(hashlib.sha256(body.encode()).digest()[:8],
+                              "little")
+
+    def shard(self, index: int, n_shards: int) -> "ConfigSpace":
+        """Deterministic partition member ``index`` of ``n_shards``.
+
+        Returns a new space with the same parameters and restrictions plus
+        a membership restriction: a config belongs to exactly one shard
+        (``config_hash % n_shards``), so the shards are disjoint and their
+        union is exactly this space's valid set. Workers tuning different
+        shards of one job therefore never duplicate an evaluation, and
+        re-planning the same job yields byte-identical shards.
+        """
+        if not 0 <= index < n_shards:
+            raise ValueError(f"shard index {index} not in [0, {n_shards})")
+        sub = ConfigSpace()
+        for p in self._params.values():
+            sub.tune(p.name, p.values, p.default)
+        for fn, src in zip(self._restrictions, self._restriction_srcs):
+            sub._restrictions.append(fn)
+            sub._restriction_srcs.append(src)
+        if n_shards > 1:
+            def _member(config: Config) -> bool:
+                return self.config_hash(config) % n_shards == index
+            sub._restrictions.append(_member)
+            sub._restriction_srcs.append(f"shard {index}/{n_shards}")
+        return sub
 
     def __repr__(self) -> str:  # pragma: no cover
         return (f"ConfigSpace({list(self._params)}, "

@@ -93,6 +93,29 @@ def make_provenance(strategy: str = "", evals: int = 0,
     }
 
 
+def make_fleet_provenance(strategy: str, evals: int, objective: str,
+                          job_id: str, n_shards: int,
+                          round_: int = 0) -> dict:
+    """Provenance for a coordinator-assembled fleet tuning record.
+
+    Deliberately *deterministic* — no timestamp, host, or user: a fleet
+    job's result is a pure function of (demand, config space, cost model),
+    and any coordinator assembling the same shard results must produce a
+    byte-identical record (``record_id`` hashes provenance). The job id
+    and shard count say where the number came from instead.
+    """
+    return {
+        "source": "fleet",
+        "strategy": strategy,
+        "evaluations": int(evals),
+        "objective": objective,
+        "job": job_id,
+        "shards": int(n_shards),
+        "round": int(round_),
+        "jax_version": jax.__version__,
+    }
+
+
 def merge_lineage(*records: "WisdomRecord", extra: Sequence[dict] = ()
                   ) -> list[dict]:
     """Combine the provenance history of ``records`` into one lineage list.

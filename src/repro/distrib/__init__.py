@@ -16,14 +16,14 @@ asset:
   (inspect/diff/merge/prune/validate/migrate).
 """
 
-from .merge import MergeReport, merge_stores, merge_wisdom
-from .store import PruneReport, ValidationIssue, WisdomStore
+from .merge import MergeReport, better_record, merge_stores, merge_wisdom
+from .store import CONTROL_PREFIX, PruneReport, ValidationIssue, WisdomStore
 from .sync import (DirectoryTransport, MemoryTransport, PullSync, PushSync,
-                   Transport)
+                   Transport, transport_wisdom)
 
 __all__ = [
-    "MergeReport", "merge_stores", "merge_wisdom",
-    "PruneReport", "ValidationIssue", "WisdomStore",
+    "MergeReport", "better_record", "merge_stores", "merge_wisdom",
+    "CONTROL_PREFIX", "PruneReport", "ValidationIssue", "WisdomStore",
     "DirectoryTransport", "MemoryTransport", "PullSync", "PushSync",
-    "Transport",
+    "Transport", "transport_wisdom",
 ]

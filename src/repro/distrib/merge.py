@@ -43,12 +43,17 @@ class MergeReport:
                 f"{self.replaced} replaced")
 
 
-def _better(a: WisdomRecord, b: WisdomRecord) -> WisdomRecord:
+def better_record(a: WisdomRecord, b: WisdomRecord) -> WisdomRecord:
     """The statistical winner of two same-scenario records (deterministic
-    under argument swap)."""
+    under argument swap). Also the rule the fleet coordinator applies to
+    same-scenario shard winners, so assembly and merge can never disagree
+    about which result survives."""
     ka = (a.score_us, -a.evaluations(), a.record_id())
     kb = (b.score_us, -b.evaluations(), b.record_id())
     return a if ka <= kb else b
+
+
+_better = better_record
 
 
 def merge_wisdom(*inputs: Wisdom, report: MergeReport | None = None) -> Wisdom:

@@ -21,6 +21,14 @@ from repro.core.wisdom import (WISDOM_VERSION, Wisdom, WisdomRecord,
 
 WISDOM_SUFFIX = ".wisdom.json"
 
+#: Transport-name namespace reserved for non-wisdom control documents.
+#: The fleet orchestrator (``repro.fleet``) publishes demand tables, job
+#: specs, shard leases and shard results through the *same* transports
+#: wisdom moves over, under names with this prefix. Kernel names must not
+#: use it: ``WisdomStore.kernels`` (and so validate/prune/push) skips it,
+#: and ``PullSync`` never merges it.
+CONTROL_PREFIX = "fleet--"
+
 
 @dataclass
 class ValidationIssue:
@@ -57,11 +65,14 @@ class WisdomStore:
         return Wisdom.path_for(kernel_name, self.root)
 
     def kernels(self) -> list[str]:
-        """Kernel names present in the store, sorted."""
+        """Kernel names present in the store, sorted. Control documents
+        (``CONTROL_PREFIX`` namespace) sharing the directory are not
+        kernels and are excluded."""
         if not self.root.is_dir():
             return []
         return sorted(p.name[:-len(WISDOM_SUFFIX)]
-                      for p in self.root.glob(f"*{WISDOM_SUFFIX}"))
+                      for p in self.root.glob(f"*{WISDOM_SUFFIX}")
+                      if not p.name.startswith(CONTROL_PREFIX))
 
     def __contains__(self, kernel_name: str) -> bool:
         return self.path_for(kernel_name).exists()

@@ -31,11 +31,17 @@ from typing import Protocol
 from repro.core.wisdom import Wisdom, WisdomRecord, migrate_doc
 
 from .merge import MergeReport, merge_wisdom
-from .store import WISDOM_SUFFIX, WisdomStore
+from .store import CONTROL_PREFIX, WISDOM_SUFFIX, WisdomStore
 
 
 class Transport(Protocol):
-    """Where the fleet's wisdom lives, reduced to three operations."""
+    """Where the fleet's wisdom lives, reduced to three operations.
+
+    Names are usually kernel names, but the ``CONTROL_PREFIX`` namespace
+    is reserved for the fleet orchestrator's control documents (demand,
+    jobs, leases, results) — transports must round-trip those names too;
+    the wisdom sync layer simply skips them.
+    """
 
     def list_kernels(self) -> list[str]: ...
 
@@ -51,7 +57,13 @@ class DirectoryTransport:
         self.store = WisdomStore(root)
 
     def list_kernels(self) -> list[str]:
-        return self.store.kernels()
+        # The raw transport view: control documents included (the store's
+        # own kernels() hides them from the wisdom layer).
+        root = self.store.root
+        if not root.is_dir():
+            return []
+        return sorted(p.name[:-len(WISDOM_SUFFIX)]
+                      for p in root.glob(f"*{WISDOM_SUFFIX}"))
 
     def fetch(self, kernel_name: str) -> dict | None:
         return self.store.load_doc(kernel_name)
@@ -100,13 +112,18 @@ class MemoryTransport:
         self.docs[kernel_name] = json.loads(json.dumps(doc))
 
 
-def _remote_wisdom(transport: Transport, kernel_name: str) -> Wisdom:
+def transport_wisdom(transport: Transport, kernel_name: str) -> Wisdom:
+    """One kernel's wisdom as the transport currently holds it (empty when
+    the fleet has none), migrated to the current schema."""
     doc = transport.fetch(kernel_name)
     if doc is None:
         return Wisdom(kernel_name)
     doc = migrate_doc(doc, source=f"<transport:{kernel_name}>")
     return Wisdom(kernel_name,
                   [WisdomRecord.from_json(r) for r in doc.get("records", [])])
+
+
+_remote_wisdom = transport_wisdom
 
 
 class PushSync:
@@ -168,6 +185,8 @@ class PullSync:
         report = MergeReport()
         changed: set[str] = set()
         for name in self.transport.list_kernels():
+            if name.startswith(CONTROL_PREFIX):
+                continue        # fleet control documents are not wisdom
             local = self.store.load(name)
             before = json.dumps(local.to_doc(), sort_keys=True)
             merged = merge_wisdom(local, _remote_wisdom(self.transport, name),

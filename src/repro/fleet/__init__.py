@@ -1,0 +1,47 @@
+"""Fleet tuning orchestrator: demand-driven, sharded, resumable jobs.
+
+Beyond-paper subsystem (connects PR 1's online demand tracking with PR
+2's wisdom distribution). The paper's workflow tunes one machine at a
+time; at fleet scale the search itself must be distributed. This package
+is the engine that decides *what to tune next, where, and survives
+interruption*:
+
+* :mod:`.bus`         — control channels (demand/job/lease/state/result)
+  over the existing wisdom sync transports, plus injectable clocks;
+* :mod:`.demand`      — aggregate worker ``ScenarioTracker`` snapshots,
+  rank scenarios by miss-count x cost-model predicted speedup;
+* :mod:`.jobs`        — :class:`TuningJob` specs, deterministic config-
+  space shards, crash-safe lease claim/heartbeat/expiry;
+* :mod:`.worker`      — :class:`FleetWorker`: claim a shard, tune it with
+  checkpointed (warm-startable) strategy sessions, publish the result;
+* :mod:`.coordinator` — :class:`Coordinator`: plan jobs from demand,
+  assemble shard winners into ``fleet``-provenance wisdom through the
+  merge engine, re-enqueue scenarios whose demand regresses;
+* :mod:`.local`       — :func:`run_local_fleet`: N in-process workers
+  over a ``MemoryTransport``, the deterministic reference harness;
+* :mod:`.cli`         — ``python -m repro.fleet``
+  (plan / coordinate / work / status / demo).
+"""
+
+from .bus import CHANNELS, Clock, ControlBus, ManualClock, WallClock
+from .coordinator import MIN_MISSES, Coordinator, CoordinatorReport
+from .demand import (DemandEntry, ScenarioPriority, aggregate_demand,
+                     predicted_speedup, prioritize, publish_demand,
+                     seed_demand)
+from .jobs import (LEASE_TTL_S, Lease, LeaseLost, TuningJob, claim_shard,
+                   fetch_lease, heartbeat, job_id_for, lease_name,
+                   list_jobs, release)
+from .local import DEMO_DEMAND, FleetRunReport, run_local_fleet
+from .worker import FleetWorker, WorkerCrash
+
+__all__ = [
+    "CHANNELS", "Clock", "ControlBus", "ManualClock", "WallClock",
+    "MIN_MISSES", "Coordinator", "CoordinatorReport",
+    "DemandEntry", "ScenarioPriority", "aggregate_demand",
+    "predicted_speedup", "prioritize", "publish_demand", "seed_demand",
+    "LEASE_TTL_S", "Lease", "LeaseLost", "TuningJob", "claim_shard",
+    "fetch_lease", "heartbeat", "job_id_for", "lease_name", "list_jobs",
+    "release",
+    "DEMO_DEMAND", "FleetRunReport", "run_local_fleet",
+    "FleetWorker", "WorkerCrash",
+]

@@ -1,0 +1,101 @@
+"""Control bus: typed fleet-control channels over a wisdom Transport.
+
+The orchestrator needs to move four kinds of control documents between
+workers and the coordinator: demand snapshots, job specs, shard leases,
+and shard results. Rather than invent a second rendezvous mechanism, they
+ride the *same* :class:`~repro.distrib.sync.Transport` the wisdom files
+do — a shared directory (or the in-memory test transport) the operator
+already has — under the reserved ``CONTROL_PREFIX`` namespace the wisdom
+sync layer skips. One mount point, one permission model, one thing to
+rsync.
+
+Names are ``fleet--<channel>--<name>``; ``name`` must be filename-safe
+(the directory transport stores one file per document).
+
+Time is injected (:class:`Clock`) so lease expiry — the one place the
+orchestrator depends on wall clock — is deterministic under test
+(:class:`ManualClock`) and real in production (:class:`WallClock`).
+"""
+
+from __future__ import annotations
+
+import re
+import time
+from typing import Protocol
+
+from repro.distrib.store import CONTROL_PREFIX
+from repro.distrib.sync import Transport
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9._-]+$")
+_SEP = "--"
+
+#: Channels the orchestrator uses (documentation; the bus accepts any
+#: filename-safe channel string).
+CHANNELS = ("demand", "job", "lease", "state", "result", "done")
+
+
+def _check(kind: str, value: str) -> str:
+    if not _NAME_RE.match(value) or _SEP in value:
+        raise ValueError(f"{kind} {value!r} is not transport-safe "
+                         f"(allowed: [A-Za-z0-9._-], no {_SEP!r})")
+    return value
+
+
+class Clock(Protocol):
+    def now(self) -> float: ...
+
+
+class WallClock:
+    """Real time — production lease expiry."""
+
+    def now(self) -> float:
+        return time.time()
+
+
+class ManualClock:
+    """Logical time advanced explicitly — deterministic lease expiry."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+
+class ControlBus:
+    """Publish/fetch/list fleet control documents on a transport."""
+
+    def __init__(self, transport: Transport):
+        self.transport = transport
+
+    @staticmethod
+    def key(channel: str, name: str) -> str:
+        return CONTROL_PREFIX + _check("channel", channel) + _SEP + name
+
+    def publish(self, channel: str, name: str, doc: dict) -> None:
+        _check("name", name.replace(_SEP, "."))   # segments must be safe
+        self.transport.publish(self.key(channel, name), doc)
+
+    def fetch(self, channel: str, name: str) -> dict | None:
+        return self.transport.fetch(self.key(channel, name))
+
+    def names(self, channel: str) -> list[str]:
+        """Document names present on ``channel``, sorted."""
+        prefix = CONTROL_PREFIX + _check("channel", channel) + _SEP
+        return sorted(n[len(prefix):]
+                      for n in self.transport.list_kernels()
+                      if n.startswith(prefix))
+
+    def docs(self, channel: str) -> list[dict]:
+        """Every document on ``channel``, in name order (skipping any that
+        vanished between list and fetch — transports are shared)."""
+        out = []
+        for name in self.names(channel):
+            doc = self.fetch(channel, name)
+            if doc is not None:
+                out.append(doc)
+        return out

@@ -1,0 +1,244 @@
+"""``python -m repro.fleet`` — operate the fleet tuning orchestrator.
+
+The rendezvous point is a shared wisdom directory (the same one
+``python -m repro.wisdom`` manages and serving hosts PullSync from);
+control documents live beside the wisdom files under the reserved
+``fleet--`` namespace. Subcommands:
+
+  plan        aggregate demand, rank scenarios, publish tuning jobs
+              (``--dry-run`` prints the plan without publishing)
+  coordinate  run coordination rounds: assemble finished jobs into fleet
+              wisdom, then re-plan from fresh demand
+  work        run a worker loop: claim shard leases, tune, checkpoint
+  status      one-screen summary of demand / jobs / leases / results
+  demo        run the in-process reference fleet (run_local_fleet) —
+              the zero-setup way to watch the whole loop
+
+A real deployment runs ``work`` on every tuning host, ``coordinate`` on
+one (any) host, and whatever serves traffic keeps publishing demand.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.distrib.store import WisdomStore
+from repro.distrib.sync import DirectoryTransport
+
+from .bus import ControlBus
+from .coordinator import MIN_MISSES, Coordinator
+from .demand import aggregate_demand, prioritize
+from .jobs import LEASE_TTL_S, fetch_lease, lease_name, list_jobs
+from .local import run_local_fleet
+from .worker import FleetWorker
+
+
+def _bus(args) -> ControlBus:
+    return ControlBus(DirectoryTransport(args.dir))
+
+
+def _coordinator(args, bus: ControlBus) -> Coordinator:
+    return Coordinator(bus, n_shards=args.shards,
+                       max_evals_per_shard=args.evals_per_shard,
+                       strategy=args.strategy, min_misses=args.min_misses,
+                       seed=args.seed)
+
+
+def _cmd_plan(args) -> int:
+    bus = _bus(args)
+    coord = _coordinator(args, bus)
+    # Filter before ranking, like Coordinator.plan: the speedup probe
+    # costs ~16 cost-model evals per scenario, and in steady state most
+    # published scenarios are below threshold or already answered.
+    entries = aggregate_demand(bus)
+    actionable = [e for e in entries
+                  if e.misses >= args.min_misses
+                  and coord.decide(e) is not None]
+    ranked = prioritize(actionable, bus.transport, seed=args.seed)
+    if not entries:
+        print("no demand published")
+        return 0
+    for p in ranked:
+        e = p.entry
+        print(f"{e.kernel} {e.key_str}: misses={e.misses} "
+              f"workers={e.workers} speedup~{p.speedup:.2f}x "
+              f"priority={p.priority:.1f}")
+    if len(entries) > len(actionable):
+        print(f"({len(entries) - len(actionable)} scenario(s) below "
+              f"threshold or already answered)")
+    if args.dry_run:
+        print("(dry run: no jobs published)")
+        return 0
+    jobs = coord.plan(ranked=ranked)
+    for job in jobs:
+        print(f"planned {job.job_id}: {job.kernel} "
+              f"{job.n_shards} shard(s) x {job.max_evals_per_shard} evals "
+              f"({job.strategy})")
+    print(f"{len(jobs)} job(s) published")
+    return 0
+
+
+def _cmd_coordinate(args) -> int:
+    bus = _bus(args)
+    coord = _coordinator(args, bus)
+    for i in range(args.rounds):
+        report = coord.tick()
+        print(f"round {i}: assembled={len(report.assembled)} "
+              f"planned={len(report.planned)} "
+              f"requeued={len(report.requeued)}")
+        if report.idle:
+            break
+    print(json.dumps(coord.status(), indent=2))
+    return 0
+
+
+def _cmd_work(args) -> int:
+    bus = _bus(args)
+    worker = FleetWorker(bus, args.worker_id, ttl_s=args.ttl,
+                         checkpoint_every=args.checkpoint_every)
+    # One-shot drain exits once nothing is claimable *right now*. With
+    # --poll the worker keeps watching while any shard still lacks a
+    # result, so a peer's crashed shard is reclaimed when its lease
+    # expires — without it, crash recovery needs a supervisor restarting
+    # this command. (Assembly is the coordinator's job: a worker must not
+    # wait on it, or the two one-shot commands would deadlock.)
+    def unfinished_shards() -> bool:
+        return any(
+            bus.fetch("result", lease_name(j.job_id, s)) is None
+            for j in list_jobs(bus)
+            if bus.fetch("done", j.job_id) is None
+            for s in j.shard_ids())
+
+    n = worker.drain(max_shards=args.max_shards)
+    while args.poll is not None:
+        if args.max_shards is not None and n >= args.max_shards:
+            break
+        if not unfinished_shards():
+            break
+        time.sleep(args.poll)
+        n += worker.drain(max_shards=(None if args.max_shards is None
+                                      else args.max_shards - n))
+    print(f"{args.worker_id}: finished {n} shard(s), "
+          f"{worker.evals_run} evaluation(s)")
+    for name in worker.shards_done:
+        print(f"  {name}")
+    return 0
+
+
+def _cmd_status(args) -> int:
+    bus = _bus(args)
+    coord = Coordinator(bus)
+    status = coord.status()
+    print(f"{args.dir}: {status['demand_entries']} demand entr(ies), "
+          f"{status['demand_misses']} miss(es), {status['jobs']} job(s) "
+          f"({status['jobs_open']} open), "
+          f"{status['shard_results']} shard result(s)")
+    for s in status["scenarios"]:
+        print(f"  demand {s['kernel']} {s['key']}: misses={s['misses']} "
+              f"from {s['workers']} worker(s)")
+    for job in list_jobs(bus):
+        states = []
+        for shard_id in job.shard_ids():
+            if bus.fetch("result", lease_name(job.job_id, shard_id)):
+                states.append("done")
+                continue
+            lease = fetch_lease(bus, job.job_id, shard_id)
+            states.append(f"leased:{lease.worker}" if lease else "open")
+        done = bus.fetch("done", job.job_id)
+        tail = (f" -> {done['state']}" if done else "")
+        print(f"  job {job.job_id} {job.kernel} "
+              f"[{' '.join(states)}]{tail}")
+    return 0
+
+
+def _cmd_demo(args) -> int:
+    report = run_local_fleet(n_workers=args.workers,
+                             n_shards=args.shards,
+                             strategy=args.strategy,
+                             max_evals_per_shard=args.evals_per_shard,
+                             min_misses=args.min_misses, seed=args.seed)
+    print(f"{report.n_workers} worker(s): {report.steps} shard(s) run, "
+          f"{report.total_evals} evaluation(s) "
+          f"(busiest worker {report.makespan_evals})")
+    for worker, shards in sorted(report.shards_by_worker.items()):
+        print(f"  {worker}: {len(shards)} shard(s), "
+              f"{report.evals_by_worker[worker]} eval(s)")
+    for kernel, doc in sorted(report.wisdom_docs.items()):
+        for rec in doc.get("records", []):
+            print(f"  wisdom {kernel}: {rec['score_us']:.2f}us "
+                  f"config={rec['config']}")
+    return 0
+
+
+def _add_tuning_args(p) -> None:
+    p.add_argument("--shards", type=int, default=4,
+                   help="shards per job (fixed per job, not per worker)")
+    p.add_argument("--evals-per-shard", type=int, default=200)
+    p.add_argument("--strategy", default="exhaustive",
+                   choices=("exhaustive", "random", "bayes", "anneal"))
+    p.add_argument("--min-misses", type=int, default=MIN_MISSES)
+    p.add_argument("--seed", type=int, default=0)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fleet",
+        description="Fleet tuning orchestrator: demand-driven, sharded, "
+                    "resumable tuning jobs over a shared wisdom directory.")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    def add_dir(p):
+        p.add_argument("--dir", default="wisdom",
+                       help="shared wisdom/control directory "
+                            "(default: ./wisdom)")
+
+    p = sub.add_parser("plan", help="rank demand and publish tuning jobs")
+    add_dir(p)
+    _add_tuning_args(p)
+    p.add_argument("--dry-run", action="store_true",
+                   help="print the scenario plan without publishing jobs")
+    p.set_defaults(fn=_cmd_plan)
+
+    p = sub.add_parser("coordinate",
+                       help="assemble finished jobs, re-plan from demand")
+    add_dir(p)
+    _add_tuning_args(p)
+    p.add_argument("--rounds", type=int, default=1)
+    p.set_defaults(fn=_cmd_coordinate)
+
+    p = sub.add_parser("work", help="claim and tune open shards")
+    add_dir(p)
+    p.add_argument("--worker-id", required=True,
+                   help="stable identity for leases (e.g. the hostname)")
+    p.add_argument("--max-shards", type=int, default=None)
+    p.add_argument("--ttl", type=float, default=LEASE_TTL_S)
+    p.add_argument("--checkpoint-every", type=int, default=8)
+    p.add_argument("--poll", type=float, default=None, metavar="SECONDS",
+                   help="keep polling for claimable shards (incl. expired "
+                        "leases of crashed peers) until no unfinished "
+                        "shard remains; default is a one-shot drain")
+    p.set_defaults(fn=_cmd_work)
+
+    p = sub.add_parser("status", help="summarize demand/jobs/leases")
+    add_dir(p)
+    p.set_defaults(fn=_cmd_status)
+
+    p = sub.add_parser("demo",
+                       help="run the in-process reference fleet "
+                            "(MemoryTransport, deterministic)")
+    p.add_argument("--workers", type=int, default=3)
+    _add_tuning_args(p)
+    p.set_defaults(fn=_cmd_demo)
+
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(main())

@@ -1,0 +1,237 @@
+"""Fleet coordinator: demand -> jobs -> assembled fleet wisdom.
+
+The coordinator closes the orchestration loop:
+
+  plan      aggregate worker demand snapshots, rank scenarios by
+            miss-count x predicted speedup, publish a sharded
+            :class:`~repro.fleet.jobs.TuningJob` per hot scenario that
+            has no finished job at the current demand level;
+  assemble  once every shard of a job has a result, pick the winner with
+            the *same* deterministic comparator the merge engine uses,
+            build a ``fleet``-provenance :class:`WisdomRecord`, and
+            fetch-merge-publish it into the transport's wisdom (and an
+            optional local store) — the fleet copy only ever improves;
+  re-check  demand keeps flowing; a scenario whose misses grew past the
+            level its last job was planned at (wisdom regressed, or the
+            record stopped matching) is re-enqueued as round N+1.
+
+Everything is deterministic: job identity hashes the scenario, shard
+membership hashes configs, winners tie-break through
+:func:`~repro.distrib.merge.better_record`, and fleet provenance carries
+no timestamps — the same demand assembles to byte-identical wisdom on
+any coordinator.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.device import get_device
+from repro.core.wisdom import (Wisdom, WisdomRecord, make_fleet_provenance)
+from repro.distrib.merge import better_record, merge_wisdom
+from repro.distrib.store import WisdomStore
+from repro.distrib.sync import transport_wisdom
+from repro.online.tracker import format_key
+
+from .bus import ControlBus
+from .demand import aggregate_demand, prioritize
+from .jobs import TuningJob, job_id_for, lease_name, list_jobs
+
+#: Misses below this never become a job (the fleet analogue of the online
+#: tracker's activation threshold).
+MIN_MISSES = 3
+
+
+@dataclass
+class CoordinatorReport:
+    planned: list[str] = field(default_factory=list)    # job ids
+    assembled: list[str] = field(default_factory=list)  # job ids
+    requeued: list[str] = field(default_factory=list)   # job ids (new round)
+    skipped: int = 0                                    # below-threshold
+
+    @property
+    def idle(self) -> bool:
+        return not (self.planned or self.assembled or self.requeued)
+
+
+class Coordinator:
+    """Plans jobs from demand and assembles shard results into wisdom."""
+
+    def __init__(self, bus: ControlBus, store: WisdomStore | None = None,
+                 n_shards: int = 4, max_evals_per_shard: int = 200,
+                 strategy: str = "exhaustive", min_misses: int = MIN_MISSES,
+                 speedup_probes: int = 16, seed: int = 0):
+        self.bus = bus
+        self.store = store
+        self.n_shards = n_shards
+        self.max_evals_per_shard = max_evals_per_shard
+        self.strategy = strategy
+        self.min_misses = min_misses
+        self.speedup_probes = speedup_probes
+        self.seed = seed
+
+    # -- planning --------------------------------------------------------------
+
+    def decide(self, entry) -> tuple[str, int, bool] | None:
+        """What planning would do for one demand entry, from the cheap
+        control documents alone: (job_id, round, is_requeue), or None
+        when the entry needs no new job (satisfied, or round in flight).
+        """
+        round_ = 0
+        requeue = False
+        while True:
+            job_id = job_id_for(entry.kernel, entry.key, round_)
+            done = self.bus.fetch("done", job_id)
+            if done is None:
+                break
+            if entry.misses <= int(done.get("misses_at_plan", 0)):
+                # demand has not moved since this round finished:
+                # wisdom already answers it, nothing to re-tune
+                return None
+            round_ += 1             # regression: demand outgrew the result
+            requeue = True
+        if self.bus.fetch("job", job_id) is not None:
+            return None             # this round is already in flight
+        return job_id, round_, requeue
+
+    def plan(self, report: CoordinatorReport | None = None,
+             ranked: list | None = None) -> list[TuningJob]:
+        """Turn current fleet demand into published jobs (idempotent: a
+        scenario with a live or demand-current finished job is skipped).
+        ``ranked`` lets a caller that already ran :func:`prioritize`
+        (e.g. to print the ranking) pass it in instead of re-probing."""
+        report = report if report is not None else CoordinatorReport()
+        if ranked is None:
+            # Filter before ranking: the speedup probe costs ~n_probes
+            # cost-model evaluations per scenario, and trackers publish
+            # *every* scenario they ever saw — in steady state almost all
+            # are below threshold or already answered by a finished job.
+            actionable = []
+            for entry in aggregate_demand(self.bus):
+                if entry.misses < self.min_misses:
+                    report.skipped += 1
+                elif self.decide(entry) is not None:
+                    actionable.append(entry)
+            ranked = prioritize(actionable, self.bus.transport,
+                                n_probes=self.speedup_probes,
+                                seed=self.seed) if actionable else []
+        jobs: list[TuningJob] = []
+        order = len(list_jobs(self.bus))
+        for pri in ranked:
+            entry = pri.entry
+            if entry.misses < self.min_misses:
+                report.skipped += 1
+                continue
+            decision = self.decide(entry)
+            if decision is None:
+                continue            # satisfied, or round already in flight
+            job_id, round_, requeue = decision
+            job = TuningJob(
+                job_id=job_id, kernel=entry.kernel,
+                device_kind=entry.key[0], problem=tuple(entry.key[1]),
+                dtype=entry.key[2], strategy=self.strategy,
+                n_shards=self.n_shards,
+                max_evals_per_shard=self.max_evals_per_shard,
+                seed=self.seed, round_=round_, misses=entry.misses,
+                order=order)
+            order += 1
+            self.bus.publish("job", job.job_id, job.to_json())
+            jobs.append(job)
+            (report.requeued if requeue else report.planned).append(job_id)
+        return jobs
+
+    # -- assembly --------------------------------------------------------------
+
+    def assemble(self, report: CoordinatorReport | None = None
+                 ) -> list[WisdomRecord]:
+        """Fold every fully-tuned job's shard winners into fleet wisdom."""
+        report = report if report is not None else CoordinatorReport()
+        records: list[WisdomRecord] = []
+        for job in list_jobs(self.bus):
+            if self.bus.fetch("done", job.job_id) is not None:
+                continue
+            results = []
+            for shard_id in job.shard_ids():
+                doc = self.bus.fetch("result",
+                                     lease_name(job.job_id, shard_id))
+                if doc is None:
+                    break
+                results.append(doc)
+            if len(results) < job.n_shards:
+                continue            # still tuning
+            record = self._assemble_job(job, results)
+            done = {"job": job.job_id, "misses_at_plan": job.misses,
+                    "round": job.round_}
+            if record is None:
+                done["state"] = "no-winner"
+            else:
+                done["state"] = "assembled"
+                done["score_us"] = record.score_us
+                done["config"] = dict(record.config)
+                records.append(record)
+            self.bus.publish("done", job.job_id, done)
+            report.assembled.append(job.job_id)
+        return records
+
+    def _assemble_job(self, job: TuningJob,
+                      results: list[dict]) -> WisdomRecord | None:
+        total_evals = sum(int(r.get("evals", 0)) for r in results)
+        dev = get_device(job.device_kind)
+        provenance = make_fleet_provenance(
+            strategy=job.strategy, evals=total_evals,
+            objective="costmodel", job_id=job.job_id,
+            n_shards=job.n_shards, round_=job.round_)
+        winner: WisdomRecord | None = None
+        for r in results:
+            if r.get("best_config") is None:
+                continue
+            cand = WisdomRecord(
+                device_kind=dev.kind, device_family=dev.family,
+                problem_size=tuple(job.problem), dtype=job.dtype,
+                config=dict(r["best_config"]),
+                score_us=float(r["best_score_us"]),
+                provenance=dict(provenance))
+            winner = cand if winner is None else better_record(winner, cand)
+        if winner is None:
+            return None             # every shard came back infeasible
+        # Shard winners flow through the merge engine into fleet wisdom:
+        # fetch-merge-publish, so a better record already on the transport
+        # (another job round, an online promotion) survives.
+        merged = merge_wisdom(Wisdom(job.kernel, [winner]),
+                              transport_wisdom(self.bus.transport,
+                                               job.kernel))
+        self.bus.transport.publish(job.kernel, merged.to_doc())
+        if self.store is not None:
+            self.store.save(merge_wisdom(self.store.load(job.kernel),
+                                         merged))
+        return winner
+
+    # -- the loop --------------------------------------------------------------
+
+    def tick(self) -> CoordinatorReport:
+        """One coordination round: assemble finished jobs, then re-check
+        demand (hot scenarios that regressed get re-enqueued)."""
+        report = CoordinatorReport()
+        self.assemble(report)
+        self.plan(report)
+        return report
+
+    # -- introspection ---------------------------------------------------------
+
+    def status(self) -> dict:
+        demand = aggregate_demand(self.bus)
+        jobs = list_jobs(self.bus)
+        done = {d["job"]: d for d in self.bus.docs("done")}
+        shard_results = len(self.bus.names("result"))
+        return {
+            "demand_entries": len(demand),
+            "demand_misses": sum(e.misses for e in demand),
+            "jobs": len(jobs),
+            "jobs_done": len(done),
+            "jobs_open": len([j for j in jobs if j.job_id not in done]),
+            "shard_results": shard_results,
+            "scenarios": [
+                {"kernel": e.kernel, "key": format_key(e.key),
+                 "misses": e.misses, "workers": e.workers}
+                for e in demand],
+        }

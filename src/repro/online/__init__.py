@@ -28,7 +28,7 @@ from .scheduler import TrialScheduler
 from .service import (OnlineTuner, enable_online_tuning, online_requested,
                       ONLINE_ENV, ONLINE_EPSILON_ENV)
 from .tracker import (MISS_TIERS, ScenarioStats, ScenarioTracker,
-                      ScenarioKey)
+                      ScenarioKey, format_key, parse_key)
 
 __all__ = [
     "BudgetTimer", "OverheadBudget", "OverheadMeter",
@@ -38,4 +38,5 @@ __all__ = [
     "OnlineTuner", "enable_online_tuning", "online_requested",
     "ONLINE_ENV", "ONLINE_EPSILON_ENV",
     "MISS_TIERS", "ScenarioStats", "ScenarioTracker", "ScenarioKey",
+    "format_key", "parse_key",
 ]

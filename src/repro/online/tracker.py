@@ -19,6 +19,38 @@ from dataclasses import dataclass, field
 
 ScenarioKey = tuple[str, tuple[int, ...], str]   # (device_kind, problem, dtype)
 
+#: Separator for the canonical string form of a ScenarioKey. Device kinds
+#: and dtypes never contain it (enforced by ``format_key``).
+_KEY_SEP = "|"
+
+
+def format_key(key: ScenarioKey) -> str:
+    """Canonical, round-trippable string form of a scenario key.
+
+    ``("tpu-v5e", (256, 256), "float32")`` -> ``"tpu-v5e|256x256|float32"``.
+    The tuple form does not survive JSON (tuples come back as lists, and
+    dict keys cannot be tuples at all), so everything that moves demand
+    records across a transport keys them by this string instead.
+    """
+    device_kind, problem, dtype = key
+    device_kind, dtype = str(device_kind), str(dtype)
+    for part in (device_kind, dtype):
+        if _KEY_SEP in part:
+            raise ValueError(f"scenario component {part!r} contains "
+                             f"{_KEY_SEP!r}")
+    dims = "x".join(str(int(d)) for d in problem)
+    return _KEY_SEP.join((device_kind, dims, dtype))
+
+
+def parse_key(s: str) -> ScenarioKey:
+    """Inverse of :func:`format_key` (hashable tuples, ints restored)."""
+    parts = s.split(_KEY_SEP)
+    if len(parts) != 3:
+        raise ValueError(f"malformed scenario key {s!r}")
+    device_kind, dims, dtype = parts
+    problem = tuple(int(d) for d in dims.split("x")) if dims else ()
+    return (device_kind, problem, dtype)
+
 #: Selection tiers that count as wisdom misses (paper §4.5 tiers 2-5: any
 #: fuzzy device/size/dtype match, and the empty-wisdom default).
 MISS_TIERS = frozenset({
@@ -51,6 +83,21 @@ class ScenarioStats:
     @property
     def dtype(self) -> str:
         return self.key[2]
+
+    def to_json(self) -> dict:
+        return {"key": format_key(self.key), "launches": self.launches,
+                "misses": self.misses, "trials": self.trials,
+                "last_tier": self.last_tier, "tiers": dict(self.tiers)}
+
+    @staticmethod
+    def from_json(d: dict) -> "ScenarioStats":
+        return ScenarioStats(key=parse_key(d["key"]),
+                             launches=int(d.get("launches", 0)),
+                             misses=int(d.get("misses", 0)),
+                             trials=int(d.get("trials", 0)),
+                             last_tier=str(d.get("last_tier", "")),
+                             tiers={str(k): int(v)
+                                    for k, v in d.get("tiers", {}).items()})
 
 
 class ScenarioTracker:
@@ -99,6 +146,12 @@ class ScenarioTracker:
 
     def all_scenarios(self) -> list[ScenarioStats]:
         return list(self._stats.values())
+
+    def snapshot(self) -> list[dict]:
+        """JSON-safe demand snapshot, canonically keyed and ordered — what
+        a fleet worker publishes through a sync transport."""
+        return [self._stats[k].to_json()
+                for k in sorted(self._stats, key=format_key)]
 
     def __len__(self) -> int:
         return len(self._stats)

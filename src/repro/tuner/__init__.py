@@ -8,14 +8,17 @@ CPU-only container) or wall-clock execution (real TPU / interpret mode).
 
 from .costmodel import CostModel, kernel_time
 from .runner import CostModelEvaluator, WallClockEvaluator, EvalResult
-from .strategies import (STRATEGIES, TuningResult, tune_anneal, tune_bayes,
-                         tune_exhaustive, tune_random)
+from .strategies import (STRATEGIES, Evaluation, TuningResult,
+                         evaluation_from_json, evaluation_to_json,
+                         tune_anneal, tune_bayes, tune_exhaustive,
+                         tune_random)
 from .tune import tune_capture, tune_kernel
 
 __all__ = [
     "CostModel", "kernel_time",
     "CostModelEvaluator", "WallClockEvaluator", "EvalResult",
-    "STRATEGIES", "TuningResult", "tune_anneal", "tune_bayes",
-    "tune_exhaustive", "tune_random",
+    "STRATEGIES", "Evaluation", "TuningResult",
+    "evaluation_from_json", "evaluation_to_json",
+    "tune_anneal", "tune_bayes", "tune_exhaustive", "tune_random",
     "tune_capture", "tune_kernel",
 ]

@@ -4,6 +4,14 @@ The paper's default is Bayesian optimization (15-minute budget); random
 search is the unbiased baseline used for the Fig 2 histograms. We implement
 both, plus simulated annealing and capped exhaustive enumeration. The GP is
 pure numpy (RBF kernel, expected-improvement acquisition).
+
+All strategies accept a warm-start ``history`` (evaluations recorded by an
+earlier, interrupted session): the session *replays* those scores instead
+of re-measuring, so a resumed run makes exactly the same proposals — rng
+draws and model fits see identical state — and continues where the dead
+session stopped. ``evaluation_to_json`` / ``evaluation_from_json`` are the
+serialized form (the fleet worker checkpoints them through the sync
+transport).
 """
 
 from __future__ import annotations
@@ -11,7 +19,7 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -29,6 +37,20 @@ class Evaluation:
     feasible: bool
     wall_s: float          # cumulative session wall time when evaluated
     error: str = ""
+
+
+def evaluation_to_json(e: Evaluation) -> dict:
+    return {"config": dict(e.config), "score_us": e.score_us,
+            "feasible": bool(e.feasible), "wall_s": e.wall_s,
+            "error": e.error}
+
+
+def evaluation_from_json(d: dict) -> Evaluation:
+    return Evaluation(config=dict(d["config"]),
+                      score_us=float(d["score_us"]),
+                      feasible=bool(d["feasible"]),
+                      wall_s=float(d.get("wall_s", 0.0)),
+                      error=str(d.get("error", "")))
 
 
 @dataclass
@@ -60,7 +82,8 @@ class _Session:
     MAX_CONSECUTIVE_DUPS = 300   # space likely exhausted beyond this
 
     def __init__(self, space: ConfigSpace, evaluate: Evaluate,
-                 max_evals: int, time_budget_s: float | None):
+                 max_evals: int, time_budget_s: float | None,
+                 history: Sequence[Evaluation] | None = None):
         self.space = space
         self.evaluate = evaluate
         self.max_evals = max_evals
@@ -70,6 +93,13 @@ class _Session:
         self.evals: list[Evaluation] = []
         self.best: Evaluation | None = None
         self._dups = 0
+        # Warm start: recorded evaluations from an interrupted session,
+        # consumed (instead of re-measured) when the strategy re-proposes
+        # the same config. The strategy itself replays its decision
+        # sequence from a fresh rng, so a same-seed resume walks the same
+        # prefix for free and continues live past it.
+        self._replay: dict[tuple, Evaluation] = {
+            space.freeze(e.config): e for e in (history or [])}
 
     def exhausted(self) -> bool:
         if len(self.evals) >= self.max_evals:
@@ -87,10 +117,15 @@ class _Session:
             self._dups += 1
             return self.seen[key]
         self._dups = 0
-        r = self.evaluate(config)
-        ev = Evaluation(config=dict(config), score_us=r.score_us,
-                        feasible=r.feasible,
-                        wall_s=time.perf_counter() - self.t0, error=r.error)
+        recorded = self._replay.pop(key, None)
+        if recorded is not None:
+            ev = recorded
+        else:
+            r = self.evaluate(config)
+            ev = Evaluation(config=dict(config), score_us=r.score_us,
+                            feasible=r.feasible,
+                            wall_s=time.perf_counter() - self.t0,
+                            error=r.error)
         self.seen[key] = ev
         self.evals.append(ev)
         if ev.feasible and (self.best is None
@@ -112,11 +147,12 @@ class _Session:
 
 def tune_random(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
                 rng: np.random.Generator | None = None,
-                time_budget_s: float | None = None) -> TuningResult:
+                time_budget_s: float | None = None,
+                history: Sequence[Evaluation] | None = None) -> TuningResult:
     rng = rng or np.random.default_rng(0)
     if space.cardinality() <= max_evals:
         # budget covers the whole space: shuffled exhaustive enumeration
-        s = _Session(space, evaluate, max_evals, time_budget_s)
+        s = _Session(space, evaluate, max_evals, time_budget_s, history)
         cfgs = list(space.enumerate())
         rng.shuffle(cfgs)
         for cfg in cfgs:
@@ -124,7 +160,7 @@ def tune_random(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
                 break
             s.run(cfg)
         return s.result("random")
-    s = _Session(space, evaluate, max_evals, time_budget_s)
+    s = _Session(space, evaluate, max_evals, time_budget_s, history)
     while not s.exhausted():
         cfg = space.sample(rng, 1)[0]
         s.run(cfg)
@@ -132,8 +168,10 @@ def tune_random(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
 
 
 def tune_exhaustive(space: ConfigSpace, evaluate: Evaluate,
-                    limit: int = 100_000) -> TuningResult:
-    s = _Session(space, evaluate, limit, None)
+                    limit: int = 100_000,
+                    history: Sequence[Evaluation] | None = None
+                    ) -> TuningResult:
+    s = _Session(space, evaluate, limit, None, history)
     for cfg in space.enumerate(limit=limit):
         if s.exhausted():
             break
@@ -144,10 +182,11 @@ def tune_exhaustive(space: ConfigSpace, evaluate: Evaluate,
 def tune_anneal(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
                 rng: np.random.Generator | None = None,
                 time_budget_s: float | None = None,
-                t0: float = 0.3, t1: float = 0.01) -> TuningResult:
+                t0: float = 0.3, t1: float = 0.01,
+                history: Sequence[Evaluation] | None = None) -> TuningResult:
     """Simulated annealing over single-parameter mutations."""
     rng = rng or np.random.default_rng(0)
-    s = _Session(space, evaluate, max_evals, time_budget_s)
+    s = _Session(space, evaluate, max_evals, time_budget_s, history)
     cur = s.run(space.default_config())
     tries = 0
     while not s.exhausted():
@@ -204,11 +243,12 @@ def _expected_improvement(mean: np.ndarray, var: np.ndarray,
 def tune_bayes(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
                rng: np.random.Generator | None = None,
                time_budget_s: float | None = None,
-               n_init: int = 12, pool: int = 256) -> TuningResult:
+               n_init: int = 12, pool: int = 256,
+               history: Sequence[Evaluation] | None = None) -> TuningResult:
     """GP + expected improvement over the unit-encoded config space
     (the paper's default strategy, per Willemsen et al. [28])."""
     rng = rng or np.random.default_rng(0)
-    s = _Session(space, evaluate, max_evals, time_budget_s)
+    s = _Session(space, evaluate, max_evals, time_budget_s, history)
     # Latin-ish init: default + random
     s.run(space.default_config())
     for cfg in space.sample(rng, max(n_init - 1, 1)):

@@ -21,7 +21,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.builder import KernelBuilder
-from repro.core.capture import load_capture
+from repro.core.capture import Capture, load_capture
 from repro.core.registry import get_kernel
 from repro.core.wisdom import WisdomRecord, make_provenance
 from repro.core.device import get_device
@@ -87,7 +87,7 @@ def tune_kernel(builder: KernelBuilder, problem: tuple[int, ...], dtype: str,
     return result
 
 
-def tune_capture(capture_path: Path | str, device_kind: str,
+def tune_capture(capture: Path | str | Capture, device_kind: str,
                  strategy: str = "bayes",
                  max_evals: int = DEFAULT_BUDGET_EVALS,
                  time_budget_s: float | None = DEFAULT_TIME_BUDGET_S,
@@ -95,14 +95,38 @@ def tune_capture(capture_path: Path | str, device_kind: str,
                  wisdom_dir: Path | str | None = None,
                  seed: int = 0,
                  store: WisdomStore | None = None) -> TuningResult:
-    """Replay a captured launch through the tuner (paper §4.2/§4.3)."""
-    cap = load_capture(capture_path)
+    """Replay a captured launch through the tuner (paper §4.2/§4.3).
+    Accepts a capture file path or an already-loaded :class:`Capture`."""
+    cap = capture if isinstance(capture, Capture) else load_capture(capture)
     builder = get_kernel(cap.kernel_name)
     return tune_kernel(builder, cap.problem_size, cap.dtype, device_kind,
                        strategy=strategy, max_evals=max_evals,
                        time_budget_s=time_budget_s, verify_args=cap.args,
                        objective=objective, wisdom_dir=wisdom_dir, seed=seed,
                        store=store)
+
+
+def plan_captures(paths: Sequence[str], device_kind: str
+                  ) -> list[tuple[Capture, list[str]]]:
+    """Group capture files into unique tuning scenarios.
+
+    Several captures of the same (kernel, problem, dtype) — re-runs,
+    copies rsync'd from many hosts — describe one scenario and must tune
+    once, not once per file. Returns ``[(capture, paths)]`` in first-seen
+    path order: the loaded representative capture (handed straight to
+    :func:`tune_capture`, no second disk parse) plus every path that
+    mapped to its scenario.
+    """
+    plan: dict[tuple, tuple[Capture, list[str]]] = {}
+    for p in paths:
+        cap = load_capture(p)
+        key = (cap.kernel_name, tuple(cap.problem_size), cap.dtype,
+               device_kind)
+        if key in plan:
+            plan[key][1].append(p)
+        else:
+            plan[key] = (cap, [p])
+    return list(plan.values())
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -121,20 +145,38 @@ def main(argv: list[str] | None = None) -> int:
                     choices=("costmodel", "wallclock"))
     ap.add_argument("--wisdom-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the deduplicated scenario plan and exit "
+                         "without tuning")
     args = ap.parse_args(argv)
 
     paths = sorted(glob.glob(args.captures))
     if not paths:
         print(f"no captures match {args.captures!r}")
         return 1
-    for p in paths:
-        res = tune_capture(p, args.device, strategy=args.strategy,
+    plan = plan_captures(paths, args.device)
+    dups = len(paths) - len(plan)
+    for cap, scenario_paths in plan:
+        label = (f"{cap.kernel_name} "
+                 f"{'x'.join(str(d) for d in cap.problem_size)} "
+                 f"{cap.dtype} on {args.device}")
+        if args.dry_run:
+            extra = (f" (+{len(scenario_paths) - 1} duplicate(s))"
+                     if len(scenario_paths) > 1 else "")
+            print(f"would tune {label}: {scenario_paths[0]}{extra}")
+            continue
+        res = tune_capture(cap, args.device,
+                           strategy=args.strategy,
                            max_evals=args.budget_evals,
                            time_budget_s=args.budget_seconds,
                            objective=args.objective,
                            wisdom_dir=args.wisdom_dir, seed=args.seed)
-        print(f"{p}: best={res.best_score_us:.2f}us "
+        print(f"{scenario_paths[0]}: best={res.best_score_us:.2f}us "
               f"evals={len(res.evaluations)} config={res.best_config}")
+        for skipped in scenario_paths[1:]:
+            print(f"{skipped}: skipped (same scenario: {label})")
+    print(f"{len(plan)} scenario(s) from {len(paths)} capture(s)"
+          + (f", {dups} duplicate(s) skipped" if dups else ""))
     return 0
 
 

@@ -1,0 +1,433 @@
+"""Fleet tuning orchestrator: demand, sharding, leases, e2e determinism.
+
+Covers the ISSUE 3 acceptance criteria: three in-process workers over a
+``MemoryTransport`` drain a seeded demand table, every shard lease is
+claimed exactly once (except the forced-crash shard, which is claimed
+twice — once by the victim, once by the reclaimer), and the merged fleet
+wisdom is byte-for-byte identical to the single-worker exhaustive run.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.builder import KernelBuilder
+from repro.core.param import ConfigSpace
+from repro.core.registry import register, unregister
+from repro.core.workload import Workload
+from repro.distrib import (CONTROL_PREFIX, DirectoryTransport,
+                           MemoryTransport, PullSync, WisdomStore)
+from repro.fleet import (ControlBus, Coordinator, FleetWorker, ManualClock,
+                         TuningJob, aggregate_demand, claim_shard,
+                         fetch_lease, job_id_for, prioritize, run_local_fleet,
+                         seed_demand)
+from repro.fleet.cli import main as fleet_cli
+from repro.online import ScenarioStats, ScenarioTracker, format_key, parse_key
+
+KERNEL = "fleettestk"
+SCENARIO_A = ("tpu-v5e", (128, 128), "float32")
+SCENARIO_B = ("tpu-v5e", (512, 256), "float32")
+
+
+def _make_test_kernel() -> KernelBuilder:
+    b = KernelBuilder(KERNEL, source="tests/test_fleet.py")
+    b.tune("bx", (8, 16, 32, 64), default=8)
+    b.tune("by", (8, 16, 32, 64), default=8)
+    b.restriction("bx * by <= 2048")
+
+    @b.workload
+    def _wl(config, problem, dtype):
+        n = 1
+        for d in problem:
+            n *= int(d)
+        tile = config["bx"] * config["by"]
+        return Workload(flops=2.0 * n, hbm_bytes=4.0 * n * (1 + 64 / tile),
+                        vmem_bytes=tile * 4, grid=max(n // tile, 1),
+                        lane_extent=config["bx"],
+                        sublane_extent=min(config["by"], 8))
+
+    return b
+
+
+BUILDER = _make_test_kernel()
+N_VALID = sum(1 for _ in BUILDER.space.enumerate())
+
+
+@pytest.fixture(autouse=True)
+def _registered_kernel():
+    """Register the synthetic kernel per test and clean up, so registry-
+    wide iteration elsewhere (test_kernels) stays builtin-only."""
+    register(BUILDER)
+    yield
+    unregister(KERNEL)
+
+
+# ------------------------------ scenario keys --------------------------------
+
+def test_scenario_key_round_trips_canonically():
+    key = ("tpu-v5e", (256, 128, 8), "bfloat16")
+    s = format_key(key)
+    assert s == "tpu-v5e|256x128x8|bfloat16"
+    assert parse_key(s) == key
+    # scalar (rank-0) problems survive too
+    assert parse_key(format_key(("cpu", (), "float32"))) == \
+        ("cpu", (), "float32")
+    with pytest.raises(ValueError):
+        format_key(("bad|device", (1,), "float32"))
+    with pytest.raises(ValueError):
+        parse_key("only|two")
+
+
+def test_scenario_stats_survive_json_transport():
+    """The satellite bug: tuple keys turned into lists across JSON
+    publish/fetch. The canonical string form must round-trip exactly."""
+    t = ScenarioTracker()
+    t.observe(*SCENARIO_A, tier="default", weight=4)
+    t.observe(*SCENARIO_A, tier="device")
+    snap = json.loads(json.dumps(t.snapshot()))       # simulate transport
+    st = ScenarioStats.from_json(snap[0])
+    assert st.key == ScenarioTracker.key(*SCENARIO_A)
+    assert isinstance(st.key[1], tuple)
+    assert st.misses == 5 and st.launches == 2
+    assert st.tiers == {"default": 1, "device": 1}
+
+
+# --------------------------------- demand ------------------------------------
+
+def test_demand_aggregates_across_workers():
+    bus = ControlBus(MemoryTransport())
+    seed_demand(bus, "w0", [(KERNEL, SCENARIO_A, 5)])
+    seed_demand(bus, "w1", [(KERNEL, SCENARIO_A, 2),
+                            (KERNEL, SCENARIO_B, 7)])
+    # republishing w0 must replace, not double-count
+    seed_demand(bus, "w0", [(KERNEL, SCENARIO_A, 5)])
+    table = aggregate_demand(bus)
+    by_key = {e.key: e for e in table}
+    assert by_key[SCENARIO_A].misses == 7
+    assert by_key[SCENARIO_A].workers == 2
+    assert by_key[SCENARIO_B].misses == 7 and by_key[SCENARIO_B].workers == 1
+
+
+def test_prioritize_orders_by_misses_times_speedup():
+    transport = MemoryTransport()
+    bus = ControlBus(transport)
+    seed_demand(bus, "w0", [(KERNEL, SCENARIO_A, 3),
+                            (KERNEL, SCENARIO_B, 3)])
+    ranked = prioritize(aggregate_demand(bus), transport)
+    assert len(ranked) == 2
+    for p in ranked:
+        assert p.speedup >= 1.0
+        assert p.priority == pytest.approx(p.entry.misses * p.speedup)
+    assert ranked[0].priority >= ranked[1].priority
+    # unknown kernels cannot be ranked here and are skipped, not fatal
+    seed_demand(bus, "w1", [("no-such-kernel", SCENARIO_A, 9)])
+    assert len(prioritize(aggregate_demand(bus), transport)) == 2
+
+
+# -------------------------------- sharding -----------------------------------
+
+def test_space_shard_partitions_exactly():
+    space = BUILDER.space
+    full = {space.freeze(c) for c in space.enumerate()}
+    n = 3
+    shards = [space.shard(i, n) for i in range(n)]
+    seen = []
+    for sub in shards:
+        seen.extend(sub.freeze(c) for c in sub.enumerate())
+    assert len(seen) == len(set(seen))            # disjoint
+    assert set(seen) == full                      # complete
+    # deterministic: re-partitioning yields identical membership
+    again = [space.shard(i, n) for i in range(n)]
+    for sub, sub2 in zip(shards, again):
+        assert ([sub.freeze(c) for c in sub.enumerate()]
+                == [sub2.freeze(c) for c in sub2.enumerate()])
+    # one shard is the whole space
+    assert {space.freeze(c)
+            for c in space.shard(0, 1).enumerate()} == full
+    with pytest.raises(ValueError):
+        space.shard(3, 3)
+
+
+def test_config_hash_is_process_stable():
+    space = ConfigSpace()
+    space.tune("a", (1, 2, 3))
+    space.tune("b", ("x", "y"))
+    # pinned value: guards against hash() randomization sneaking in
+    assert space.config_hash({"a": 2, "b": "y"}) \
+        == space.config_hash({"b": "y", "a": 2})
+    h1 = space.config_hash({"a": 1, "b": "x"})
+    assert isinstance(h1, int) and h1 == space.config_hash(
+        {"a": 1, "b": "x"})
+
+
+# --------------------------------- leases ------------------------------------
+
+def _job(n_shards=2, max_evals=100, round_=0):
+    return TuningJob(job_id=job_id_for(KERNEL, SCENARIO_A, round_),
+                     kernel=KERNEL, device_kind=SCENARIO_A[0],
+                     problem=SCENARIO_A[1], dtype=SCENARIO_A[2],
+                     n_shards=n_shards, max_evals_per_shard=max_evals,
+                     round_=round_)
+
+
+def test_lease_claim_conflict_expiry_reclaim():
+    bus = ControlBus(MemoryTransport())
+    clock = ManualClock()
+    job = _job()
+    lease = claim_shard(bus, job, "s000", "w0", clock, ttl_s=30.0)
+    assert lease is not None and lease.worker == "w0" and lease.claims == 1
+    # live lease: nobody else can claim
+    assert claim_shard(bus, job, "s000", "w1", clock, ttl_s=30.0) is None
+    # expiry: the shard is claimable again, hand-off counted
+    clock.advance(31.0)
+    lease2 = claim_shard(bus, job, "s000", "w1", clock, ttl_s=30.0)
+    assert lease2 is not None and lease2.worker == "w1"
+    assert lease2.claims == 2
+    # a done lease is never reclaimed, even after expiry
+    from repro.fleet import release
+    release(bus, lease2)
+    clock.advance(100.0)
+    assert claim_shard(bus, job, "s000", "w2", clock, ttl_s=30.0) is None
+    assert fetch_lease(bus, job.job_id, "s000").state == "done"
+
+
+def test_stalled_worker_cannot_steal_back_reclaimed_lease():
+    """A worker that stalls past its TTL must abandon the shard at its
+    next checkpoint, not overwrite the reclaimer's lease."""
+    from repro.fleet import LeaseLost, heartbeat, release
+
+    bus = ControlBus(MemoryTransport())
+    clock = ManualClock()
+    job = _job()
+    stale = claim_shard(bus, job, "s000", "w0", clock, ttl_s=30.0)
+    clock.advance(31.0)
+    fresh = claim_shard(bus, job, "s000", "w1", clock, ttl_s=30.0)
+    assert fresh is not None and fresh.claims == 2
+    # the stalled worker wakes up: heartbeat and release both refuse
+    with pytest.raises(LeaseLost):
+        heartbeat(bus, stale, clock, ttl_s=30.0)
+    with pytest.raises(LeaseLost):
+        release(bus, stale)
+    cur = fetch_lease(bus, job.job_id, "s000")
+    assert cur.worker == "w1" and cur.claims == 2 and cur.state != "done"
+    # the rightful owner's heartbeat still works
+    heartbeat(bus, fresh, clock, ttl_s=30.0)
+
+
+def test_job_round_trips_and_id_deterministic():
+    job = _job(n_shards=5, max_evals=42, round_=2)
+    again = TuningJob.from_json(json.loads(json.dumps(job.to_json())))
+    assert again == job
+    assert job_id_for(KERNEL, SCENARIO_A, 0) == \
+        job_id_for(KERNEL, SCENARIO_A, 0)
+    assert job_id_for(KERNEL, SCENARIO_A, 0) != \
+        job_id_for(KERNEL, SCENARIO_A, 1)
+    assert job.shard_seed("s000") != job.shard_seed("s001")
+
+
+# ----------------------------- worker + coordinator --------------------------
+
+def test_single_worker_drains_job_and_assembles_wisdom():
+    transport = MemoryTransport()
+    bus = ControlBus(transport)
+    clock = ManualClock()
+    seed_demand(bus, "svc", [(KERNEL, SCENARIO_A, 5)])
+    coord = Coordinator(bus, n_shards=2, max_evals_per_shard=100)
+    jobs = coord.plan()
+    assert len(jobs) == 1
+    worker = FleetWorker(bus, "w0", clock=clock)
+    assert worker.drain() == 2                    # both shards
+    assert worker.evals_run == N_VALID            # exhaustive, no overlap
+    records = coord.assemble()
+    assert len(records) == 1
+    rec = records[0]
+    assert rec.provenance["source"] == "fleet"
+    assert rec.provenance["evaluations"] == N_VALID
+    assert rec.provenance["job"] == jobs[0].job_id
+    assert "date" not in rec.provenance           # deterministic identity
+    doc = transport.fetch(KERNEL)
+    assert doc is not None and len(doc["records"]) == 1
+    # a second coordination round is a no-op: demand unchanged
+    report = coord.tick()
+    assert report.idle
+
+
+def test_acceptance_crash_reclaim_byte_identical_wisdom():
+    """ISSUE 3 acceptance: 3 workers + forced crash vs 1 worker."""
+    demand = [(KERNEL, SCENARIO_A, 5), (KERNEL, SCENARIO_B, 4)]
+    kw = dict(demand=demand, n_shards=4, strategy="exhaustive",
+              checkpoint_every=2, seed=0)
+    r3 = run_local_fleet(n_workers=3, crash_worker="w0",
+                         crash_after_evals=3, **kw)
+    r1 = run_local_fleet(n_workers=1, **kw)
+
+    # the demand table drained: every scenario's job assembled
+    assert len(r3.jobs_assembled) == 2
+    assert r3.status["jobs_open"] == 0
+    assert r3.crashes == 1
+    # every shard lease claimed exactly once, except the crashed shard
+    # (claimed by the victim, reclaimed once after expiry)
+    claims = r3.claims()
+    assert len(claims) == 8
+    assert sorted(claims.values()) == [1] * 7 + [2]
+    crashed = [n for n, c in claims.items() if c == 2][0]
+    assert r3.leases[crashed].state == "done"
+    assert r3.leases[crashed].worker != "w0"      # finished by a reclaimer
+    # warm start really resumed: no evaluation was measured twice
+    assert r3.total_evals == r1.total_evals == 2 * N_VALID
+    # byte-for-byte identical fleet wisdom
+    assert json.dumps(r3.wisdom_docs, sort_keys=True) \
+        == json.dumps(r1.wisdom_docs, sort_keys=True)
+    # and the fleet optimum matches a plain single-space exhaustive tune
+    from repro.core import get_device
+    from repro.tuner import CostModelEvaluator, tune_exhaustive
+    ev = CostModelEvaluator(BUILDER, SCENARIO_A[1], SCENARIO_A[2],
+                            get_device(SCENARIO_A[0]), verify="none")
+    offline = tune_exhaustive(BUILDER.space, ev)
+    recs = [r for r in r3.wisdom_docs[KERNEL]["records"]
+            if tuple(r["problem_size"]) == SCENARIO_A[1]]
+    assert recs[0]["config"] == offline.best_config
+    assert recs[0]["score_us"] == pytest.approx(offline.best_score_us)
+
+
+def test_worker_skips_jobs_for_unknown_kernels_without_claiming():
+    """Heterogeneous fleet: a job planned elsewhere for a kernel this
+    host does not have must be left alone — no crash, no lease held."""
+    bus = ControlBus(MemoryTransport())
+    job = TuningJob(job_id=job_id_for("elsewhere-kernel", SCENARIO_A, 0),
+                    kernel="elsewhere-kernel", device_kind=SCENARIO_A[0],
+                    problem=SCENARIO_A[1], dtype=SCENARIO_A[2], n_shards=2)
+    bus.publish("job", job.job_id, job.to_json())
+    worker = FleetWorker(bus, "w0", clock=ManualClock())
+    assert worker.run_once() is None
+    assert bus.names("lease") == []               # never claimed
+
+
+def test_coordinator_reenqueues_regressed_scenario():
+    report = run_local_fleet(n_workers=2, demand=[(KERNEL, SCENARIO_A, 5)],
+                             n_shards=2)
+    assert report.jobs_assembled == [job_id_for(KERNEL, SCENARIO_A, 0)]
+    bus = ControlBus(report.transport)
+    coord = Coordinator(bus, n_shards=2)
+    # demand level unchanged -> nothing to do
+    assert coord.plan() == []
+    # a new worker reports fresh misses: the scenario regressed
+    seed_demand(bus, "late-worker", [(KERNEL, SCENARIO_A, 4)])
+    jobs = coord.plan()
+    assert [j.job_id for j in jobs] == [job_id_for(KERNEL, SCENARIO_A, 1)]
+    assert jobs[0].round_ == 1
+
+
+def test_random_strategy_fleet_matches_across_worker_counts():
+    """Sharded non-exhaustive search is still schedule-independent: the
+    shard seed comes from the job, not the worker."""
+    demand = [(KERNEL, SCENARIO_A, 5)]
+    kw = dict(demand=demand, n_shards=3, strategy="random",
+              max_evals_per_shard=6, seed=0)
+    r1 = run_local_fleet(n_workers=1, **kw)
+    r2 = run_local_fleet(n_workers=2, **kw)
+    assert json.dumps(r1.wisdom_docs, sort_keys=True) \
+        == json.dumps(r2.wisdom_docs, sort_keys=True)
+
+
+# ------------------------- transports + wisdom isolation ---------------------
+
+def test_control_docs_invisible_to_wisdom_layer(tmp_path):
+    shared = DirectoryTransport(tmp_path / "shared")
+    bus = ControlBus(shared)
+    seed_demand(bus, "w0", [(KERNEL, SCENARIO_A, 5)])
+    bus.publish("job", "j-test-r0", _job().to_json())
+    # the raw transport sees control docs; the wisdom store does not
+    assert any(n.startswith(CONTROL_PREFIX) for n in shared.list_kernels())
+    assert WisdomStore(tmp_path / "shared").kernels() == []
+    # PullSync over the shared dir ignores them entirely
+    local = WisdomStore(tmp_path / "local")
+    PullSync(local, shared, interval=1).pull()
+    assert local.kernels() == []
+    assert WisdomStore(tmp_path / "shared").validate() == []
+
+
+def test_directory_transport_fleet_run_matches_memory(tmp_path):
+    demand = [(KERNEL, SCENARIO_A, 5)]
+    kw = dict(n_workers=2, demand=demand, n_shards=2)
+    r_mem = run_local_fleet(**kw)
+    r_dir = run_local_fleet(
+        transport=DirectoryTransport(tmp_path / "shared"), **kw)
+    assert json.dumps(r_mem.wisdom_docs, sort_keys=True) \
+        == json.dumps(r_dir.wisdom_docs, sort_keys=True)
+
+
+# ----------------------------------- CLI -------------------------------------
+
+def test_fleet_cli_plan_work_status(tmp_path, capsys):
+    d = str(tmp_path / "shared")
+    bus = ControlBus(DirectoryTransport(d))
+    seed_demand(bus, "host-a", [(KERNEL, SCENARIO_A, 5)])
+
+    assert fleet_cli(["plan", "--dir", d, "--dry-run"]) == 0
+    out = capsys.readouterr().out
+    assert "dry run" in out and KERNEL in out
+    assert bus.names("job") == []                 # dry run published nothing
+
+    assert fleet_cli(["plan", "--dir", d, "--shards", "2",
+                      "--evals-per-shard", "100"]) == 0
+    assert len(bus.names("job")) == 1
+    capsys.readouterr()
+
+    # --poll must exit once every shard has a result, even though the
+    # coordinator has not assembled the job yet (one-shot sequencing)
+    assert fleet_cli(["work", "--dir", d, "--worker-id", "host-a",
+                      "--poll", "0.01"]) == 0
+    assert "finished 2 shard(s)" in capsys.readouterr().out
+
+    assert fleet_cli(["coordinate", "--dir", d, "--shards", "2",
+                      "--evals-per-shard", "100"]) == 0
+    capsys.readouterr()
+    assert fleet_cli(["status", "--dir", d]) == 0
+    out = capsys.readouterr().out
+    assert "assembled" in out and "misses=5" in out
+    assert WisdomStore(d).kernels() == [KERNEL]
+
+    # --poll exits on its own once every job is assembled
+    assert fleet_cli(["work", "--dir", d, "--worker-id", "host-b",
+                      "--poll", "0.01"]) == 0
+    assert "finished 0 shard(s)" in capsys.readouterr().out
+
+
+def test_fleet_cli_status_empty_dir(tmp_path, capsys):
+    assert fleet_cli(["status", "--dir", str(tmp_path / "nothing")]) == 0
+    assert "0 demand" in capsys.readouterr().out
+
+
+# -------------------------- tune CLI dedup satellite -------------------------
+
+def test_tune_cli_dedups_captures_and_dry_runs(tmp_path, capsys,
+                                               wisdom_dir):
+    import shutil
+
+    from repro.core.capture import write_capture
+    from repro.tuner.tune import main as tune_cli
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 64)).astype(np.float32)
+    cap_dir = tmp_path / "caps"
+    p = write_capture("matmul", (64, 64, 64), "float32", [a, b],
+                      out_dir=cap_dir)
+    shutil.copy(p, cap_dir / "copy-of-same.capture.json")
+    glob_arg = str(cap_dir / "*.capture.json")
+
+    assert tune_cli(["--captures", glob_arg, "--dry-run"]) == 0
+    out = capsys.readouterr().out
+    assert "would tune matmul 64x64x64 float32" in out
+    assert "+1 duplicate(s)" in out
+    assert "1 scenario(s) from 2 capture(s), 1 duplicate(s) skipped" in out
+    assert not (wisdom_dir / "matmul.wisdom.json").exists()
+
+    assert tune_cli(["--captures", glob_arg, "--strategy", "random",
+                     "--budget-evals", "4"]) == 0
+    out = capsys.readouterr().out
+    assert out.count("best=") == 1                # tuned once, not twice
+    assert "skipped (same scenario" in out
+    assert len(WisdomStore(wisdom_dir).load("matmul").records) == 1

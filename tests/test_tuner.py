@@ -4,8 +4,10 @@ import numpy as np
 import pytest
 
 from repro.core import ConfigSpace, Workload, get_device, get_kernel
-from repro.tuner import (CostModel, CostModelEvaluator, tune_anneal,
-                         tune_bayes, tune_exhaustive, tune_random)
+from repro.tuner import (CostModel, CostModelEvaluator, Evaluation,
+                         evaluation_from_json, evaluation_to_json,
+                         tune_anneal, tune_bayes, tune_exhaustive,
+                         tune_random)
 from repro.tuner.runner import EvalResult
 
 
@@ -73,6 +75,97 @@ def test_dedup_same_config_not_reevaluated():
     tune_anneal(s, ev, max_evals=30, rng=np.random.default_rng(0))
     keys = [tuple(sorted(c.items())) for c in calls]
     assert len(keys) == len(set(keys))
+
+
+# ----------------------- warm start (fleet resume) -----------------------
+
+
+class _Interrupted(Exception):
+    pass
+
+
+def _crash_then_resume(strategy, max_evals=40, crash_after=13, seed=7):
+    """Run ``strategy`` three ways on the quadratic landscape: straight
+    through, killed mid-session (the fleet worker's crash path: the log
+    records every measured config, including the one whose result the
+    session never saw), and resumed from the serialized log."""
+    s, ev = quadratic_space()
+
+    full_calls = []
+
+    def ev_full(cfg):
+        full_calls.append(s.freeze(cfg))
+        return ev(cfg)
+
+    full = strategy(s, ev_full, max_evals=max_evals,
+                    rng=np.random.default_rng(seed))
+
+    log = []
+
+    def ev_crash(cfg):
+        r = ev(cfg)
+        log.append(Evaluation(config=dict(cfg), score_us=r.score_us,
+                              feasible=r.feasible, wall_s=0.0,
+                              error=r.error))
+        if len(log) >= crash_after:
+            raise _Interrupted
+        return r
+
+    with pytest.raises(_Interrupted):
+        strategy(s, ev_crash, max_evals=max_evals,
+                 rng=np.random.default_rng(seed))
+
+    history = [evaluation_from_json(d)                 # disk round-trip
+               for d in [evaluation_to_json(e) for e in log]]
+    resumed_calls = []
+
+    def ev_resumed(cfg):
+        resumed_calls.append(s.freeze(cfg))
+        return ev(cfg)
+
+    resumed = strategy(s, ev_resumed, max_evals=max_evals,
+                       rng=np.random.default_rng(seed),
+                       history=history)
+    return s, full, full_calls, log, resumed, resumed_calls
+
+
+@pytest.mark.parametrize("strategy",
+                         [tune_bayes, tune_anneal, tune_random])
+def test_warm_start_resume_is_deterministic(strategy):
+    """ISSUE 3 satellite: resuming from a serialized history with the
+    same seed must visit exactly the configs an uninterrupted run would
+    have visited after the crash point — no re-measurement, no drift."""
+    s, full, full_calls, log, resumed, resumed_calls = \
+        _crash_then_resume(strategy)
+    k = len(log)
+    # the interrupted prefix matches the uninterrupted run
+    assert [s.freeze(e.config) for e in log] == full_calls[:k]
+    # the resume measures exactly the remaining configs, in order
+    assert resumed_calls == full_calls[k:]
+    # and the final session state is identical
+    assert [s.freeze(e.config) for e in resumed.evaluations] \
+        == [s.freeze(e.config) for e in full.evaluations]
+    assert resumed.best_config == full.best_config
+    assert resumed.best_score_us == full.best_score_us
+
+
+def test_warm_start_exhaustive_skips_measured_prefix():
+    s, ev = quadratic_space()
+    calls = []
+
+    def ev_live(cfg):
+        calls.append(s.freeze(cfg))
+        return ev(cfg)
+
+    head = [c for _, c in zip(range(30), s.enumerate())]
+    history = [Evaluation(config=dict(c),
+                          score_us=float((c["x"] - 5) ** 2
+                                         + (c["y"] - 3) ** 2 + 1.0),
+                          feasible=True, wall_s=0.0) for c in head]
+    res = tune_exhaustive(s, ev_live, limit=1000, history=history)
+    assert len(calls) == 100 - 30                  # prefix replayed free
+    assert len(res.evaluations) == 100
+    assert res.best_config == {"x": 5, "y": 3}
 
 
 # ------------------------------ cost model ------------------------------
