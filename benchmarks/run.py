@@ -10,6 +10,9 @@
                                   5% of the offline optimum)
   (ours)   -> fleet_tuning       (N-worker shard parallelism at equal eval
                                   budget; byte-identical assembled wisdom)
+  (ours)   -> strategy_bench     (fraction-of-optimum per strategy on the
+                                  shipped recorded spaces; deterministic,
+                                  threshold-gated)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 """
@@ -22,7 +25,7 @@ import time
 
 MODULES = ("capture_bench", "distribution", "tuning_session",
            "portability", "ppm", "overhead", "online_convergence",
-           "fleet_tuning")
+           "fleet_tuning", "strategy_bench")
 
 
 def main() -> None:

@@ -1,0 +1,57 @@
+"""Strategy benchmark on the shipped recorded spaces (repro.tunebench).
+
+Replays every search strategy against the recorded tuning-space datasets
+checked in under ``benchmarks/datasets/`` — matmul plus one MicroHH
+stencil — with the harness defaults, exactly as
+``python -m repro.tunebench compare`` does, so the CSV here and the CLI
+report are two views of the same deterministic computation. Asserts:
+
+  * the report is deterministic (two runs produce byte-identical JSON —
+    the ISSUE 4 acceptance criterion);
+  * every strategy clears its fraction-of-optimum regression threshold
+    (a failure means a strategy change made the tuner worse).
+
+CSV: dataset, strategy, final_fraction, threshold, frac@25%, frac@50%,
+best_us, optimum_us, pass.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.tunebench import SpaceDataset, compare, dump_report
+
+from .common import csv_row
+
+DATASET_DIR = Path(__file__).parent / "datasets"
+
+
+def shipped_datasets() -> list[SpaceDataset]:
+    paths = sorted(DATASET_DIR.glob("*.space.json"))
+    assert paths, f"no shipped datasets under {DATASET_DIR}"
+    return [SpaceDataset.load(p) for p in paths]
+
+
+def run():
+    yield csv_row("strategy_bench", "dataset", "strategy",
+                  "final_fraction", "threshold", "frac_at_25pct",
+                  "frac_at_50pct", "best_us", "optimum_us", "pass")
+    datasets = shipped_datasets()
+    report = compare(datasets)
+    again = compare(datasets)
+    assert dump_report(report) == dump_report(again), \
+        "strategy benchmark report is not deterministic"
+    for ds in report["datasets"]:
+        for s in ds["strategies"]:
+            curve = s["mean_curve"]
+            q25 = curve[len(curve) // 4 - 1] if curve else 0.0
+            q50 = curve[len(curve) // 2 - 1] if curve else 0.0
+            best = min((b for b in s["per_seed_best_us"] if b is not None),
+                       default=None)
+            yield csv_row("strategy_bench", ds["dataset"], s["strategy"],
+                          f"{s['final_fraction']:.4f}",
+                          f"{s['threshold']:.2f}",
+                          f"{q25:.4f}", f"{q50:.4f}",
+                          best, ds["optimum_us"], int(s["pass"]))
+    assert report["pass"], \
+        "a strategy dropped below its fraction-of-optimum threshold"

@@ -2,12 +2,12 @@
 16 scenarios and print the portability matrix + PPM summary — then show the
 runtime selection picking per-scenario winners.
 
-Run: PYTHONPATH=src python examples/tune_microhh.py
+Run: PYTHONPATH=src python examples/tune_microhh.py [--max-evals 100]
 """
 
+import argparse
 import tempfile
-
-import numpy as np
+import zlib
 
 from repro.configs.microhh import scenarios
 from repro.core import WisdomKernel, get_kernel
@@ -16,14 +16,33 @@ from repro.tuner import tune_kernel
 SCS = [s for s in scenarios() if s.grid[0] == 256]  # 8 scenarios, fast
 
 
-def main():
+def stable_seed(key: str) -> int:
+    """Per-scenario rng seed. crc32, not hash(): the builtin is
+    randomized per process (PYTHONHASHSEED), which would make every run
+    tune differently."""
+    return zlib.crc32(key.encode()) % 2**31
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-evals", type=int, default=100,
+                    help="evaluation budget per scenario")
+    ap.add_argument("--budget-seconds", type=float, default=60.0)
+    ap.add_argument("--record-dataset", default=None, metavar="DIR",
+                    help="also record every evaluation as tuning-space "
+                         "datasets (docs/tuning-datasets.md)")
+    args = ap.parse_args(argv)
+
     wisdom_dir = tempfile.mkdtemp(prefix="kl-microhh-")
     print(f"wisdom -> {wisdom_dir}")
     for sc in SCS:
         res = tune_kernel(get_kernel(sc.kernel), sc.grid, sc.dtype,
-                          sc.device, strategy="bayes", max_evals=100,
-                          time_budget_s=60, wisdom_dir=wisdom_dir,
-                          seed=hash(sc.key) % 2**31)
+                          sc.device, strategy="bayes",
+                          max_evals=args.max_evals,
+                          time_budget_s=args.budget_seconds,
+                          wisdom_dir=wisdom_dir,
+                          seed=stable_seed(sc.key),
+                          record_dataset=args.record_dataset)
         print(f"tuned {sc.key:42s} best={res.best_score_us:9.1f}us "
               f"evals={len(res.evaluations)}")
 

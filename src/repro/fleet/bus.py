@@ -42,18 +42,43 @@ def _check(kind: str, value: str) -> str:
 
 
 class Clock(Protocol):
+    """Injectable time source: anything with ``now() -> float`` seconds.
+
+    The orchestrator touches wall clock in exactly one place — lease
+    expiry — and always through this protocol, so production uses
+    :class:`WallClock` and tests drive expiry deterministically with a
+    :class:`ManualClock`. Example: ``claim_shard(bus, job, "s000",
+    "w1", clock)``.
+    """
+
     def now(self) -> float: ...
 
 
 class WallClock:
-    """Real time — production lease expiry."""
+    """Real time (``time.time``) — the production :class:`Clock`.
+
+    The default everywhere a clock is optional; only tests and the
+    deterministic local harness substitute something else.
+    Example: ``FleetWorker(bus, "host-1", clock=WallClock())``.
+    """
 
     def now(self) -> float:
         return time.time()
 
 
 class ManualClock:
-    """Logical time advanced explicitly — deterministic lease expiry."""
+    """Logical time advanced explicitly — the deterministic :class:`Clock`.
+
+    ``advance(dt)`` is the only way time moves, which makes lease
+    expiry (and therefore crash-reclaim scheduling) a pure function of
+    the test script rather than host speed.
+
+    Example::
+
+        clock = ManualClock()
+        lease = claim_shard(bus, job, "s000", "w1", clock)
+        clock.advance(LEASE_TTL_S + 1)      # w1's lease is now expired
+    """
 
     def __init__(self, t: float = 0.0):
         self.t = float(t)
@@ -67,7 +92,21 @@ class ManualClock:
 
 
 class ControlBus:
-    """Publish/fetch/list fleet control documents on a transport."""
+    """Publish/fetch/list fleet control documents on a transport.
+
+    The single rendezvous abstraction of the orchestrator: demand
+    snapshots, job specs, leases, checkpoints and results are all just
+    JSON documents on named channels, stored through whatever wisdom
+    :class:`~repro.distrib.sync.Transport` the deployment already has
+    (a shared directory in production, memory in tests) under the
+    reserved ``fleet--`` namespace.
+
+    Example::
+
+        bus = ControlBus(DirectoryTransport("/mnt/shared/wisdom"))
+        bus.publish("demand", "host-1", {"worker": "host-1", ...})
+        docs = bus.docs("demand")
+    """
 
     def __init__(self, transport: Transport):
         self.transport = transport

@@ -96,8 +96,13 @@ def _cmd_coordinate(args) -> int:
 
 def _cmd_work(args) -> int:
     bus = _bus(args)
+    datasets = None
+    if args.dataset_dir is not None:
+        from repro.tunebench import DatasetStore
+        datasets = DatasetStore(args.dataset_dir)
     worker = FleetWorker(bus, args.worker_id, ttl_s=args.ttl,
-                         checkpoint_every=args.checkpoint_every)
+                         checkpoint_every=args.checkpoint_every,
+                         datasets=datasets)
     # One-shot drain exits once nothing is claimable *right now*. With
     # --poll the worker keeps watching while any shard still lacks a
     # result, so a peer's crashed shard is reclaimed when its lease
@@ -215,6 +220,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--max-shards", type=int, default=None)
     p.add_argument("--ttl", type=float, default=LEASE_TTL_S)
     p.add_argument("--checkpoint-every", type=int, default=8)
+    p.add_argument("--dataset-dir", default=None, metavar="DIR",
+                   help="recorded tuning-space datasets "
+                        "(repro.tunebench): shard sessions replay "
+                        "matching recorded evaluations instead of "
+                        "re-measuring them")
     p.add_argument("--poll", type=float, default=None, metavar="SECONDS",
                    help="keep polling for claimable shards (incl. expired "
                         "leases of crashed peers) until no unfinished "

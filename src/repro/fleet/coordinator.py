@@ -44,6 +44,18 @@ MIN_MISSES = 3
 
 @dataclass
 class CoordinatorReport:
+    """What one coordination round did (job ids per outcome).
+
+    ``idle`` is the loop's convergence signal: nothing planned,
+    assembled, or requeued this round means demand is fully answered.
+
+    Example::
+
+        report = coordinator.tick()
+        if report.idle:
+            break
+    """
+
     planned: list[str] = field(default_factory=list)    # job ids
     assembled: list[str] = field(default_factory=list)  # job ids
     requeued: list[str] = field(default_factory=list)   # job ids (new round)
@@ -55,7 +67,19 @@ class CoordinatorReport:
 
 
 class Coordinator:
-    """Plans jobs from demand and assembles shard results into wisdom."""
+    """Plans jobs from demand and assembles shard results into wisdom.
+
+    Any host can run one (job identity is deterministic, so concurrent
+    planners collide into the same jobs instead of duplicating work);
+    ``tick()`` is the whole loop — assemble finished jobs, then re-plan
+    from fresh demand.
+
+    Example::
+
+        coord = Coordinator(ControlBus(transport), n_shards=4)
+        while not coord.tick().idle:
+            pass
+    """
 
     def __init__(self, bus: ControlBus, store: WisdomStore | None = None,
                  n_shards: int = 4, max_evals_per_shard: int = 200,

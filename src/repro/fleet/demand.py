@@ -39,7 +39,18 @@ SPEEDUP_PROBES = 16
 
 @dataclass
 class DemandEntry:
-    """Fleet-wide demand for one (kernel, scenario)."""
+    """Fleet-wide demand for one (kernel, scenario).
+
+    The sum of every worker's wisdom-miss counters for the scenario,
+    plus how many workers reported it — the raw material
+    :func:`prioritize` ranks. Produced by :func:`aggregate_demand`.
+
+    Example::
+
+        entries = aggregate_demand(bus)
+        hot = [e for e in entries if e.misses >= MIN_MISSES]
+    """
+
     kernel: str
     key: ScenarioKey
     misses: int = 0
@@ -53,6 +64,19 @@ class DemandEntry:
 
 @dataclass
 class ScenarioPriority:
+    """A demand entry with its cost-model headroom estimate attached.
+
+    ``priority = misses x speedup``: traffic volume times how much the
+    cost model thinks tuning could still win over what selection
+    returns today. Produced by :func:`predicted_speedup` /
+    :func:`prioritize`; consumed by the coordinator's planner.
+
+    Example::
+
+        for p in prioritize(entries, transport):
+            print(p.entry.kernel, p.speedup, p.priority)
+    """
+
     entry: DemandEntry
     current_score_us: float
     probe_score_us: float
@@ -70,6 +94,10 @@ def publish_demand(bus: ControlBus, worker_id: str,
     Cumulative-counter semantics: each publish *replaces* the worker's
     previous snapshot (tracker counters only grow), so re-publishing is
     idempotent and the aggregate never double-counts a launch.
+
+    Example::
+
+        publish_demand(bus, "host-1", {"matmul": kernel.tracker})
     """
     bus.publish("demand", worker_id, {
         "worker": worker_id,
@@ -81,7 +109,16 @@ def publish_demand(bus: ControlBus, worker_id: str,
 def seed_demand(bus: ControlBus, worker_id: str,
                 entries: list[tuple[str, ScenarioKey, int]]) -> None:
     """Publish a synthetic demand snapshot — (kernel, key, misses) triples.
-    Test/benchmark/CLI convenience standing in for real trackers."""
+
+    Test/benchmark/CLI convenience standing in for real trackers: builds
+    throwaway ``ScenarioTracker``s with the requested miss counts and
+    publishes them like a real worker would.
+
+    Example::
+
+        seed_demand(bus, "seed",
+                    [("matmul", ("tpu-v5e", (256, 256, 256), "float32"), 5)])
+    """
     trackers: dict[str, ScenarioTracker] = {}
     for kernel, key, misses in entries:
         t = trackers.setdefault(kernel, ScenarioTracker())
@@ -90,8 +127,16 @@ def seed_demand(bus: ControlBus, worker_id: str,
 
 
 def aggregate_demand(bus: ControlBus) -> list[DemandEntry]:
-    """Merge every worker's snapshot into one table, deterministically
-    ordered by (kernel, key)."""
+    """Merge every worker's snapshot into one fleet-wide demand table.
+
+    Sums misses/launches per (kernel, scenario) across all published
+    snapshots and counts the reporting workers; deterministically
+    ordered by (kernel, key) so every coordinator sees the same table.
+
+    Example::
+
+        entries = aggregate_demand(ControlBus(transport))
+    """
     table: dict[tuple[str, str], DemandEntry] = {}
     for doc in bus.docs("demand"):
         for kernel, stats in doc.get("kernels", {}).items():
@@ -120,6 +165,13 @@ def predicted_speedup(kernel: str, key: ScenarioKey, wisdom: Wisdom,
 
     Returns None when the kernel is unknown on this host (a worker
     elsewhere may still tune it; the coordinator just cannot rank it).
+
+    Example::
+
+        pri = predicted_speedup("matmul",
+                                ("tpu-v5e", (256, 256, 256), "float32"),
+                                store.load("matmul"))
+        if pri is not None and pri.speedup > 1.5: ...
     """
     try:
         builder = get_kernel(kernel)
@@ -146,8 +198,19 @@ def predicted_speedup(kernel: str, key: ScenarioKey, wisdom: Wisdom,
 def prioritize(entries: list[DemandEntry], transport: Transport,
                n_probes: int = SPEEDUP_PROBES,
                seed: int = 0) -> list[ScenarioPriority]:
-    """Rank demand entries by miss-count x predicted speedup (descending;
-    ties broken by (kernel, key) so every coordinator agrees)."""
+    """Rank demand entries by miss-count x predicted speedup.
+
+    Runs :func:`predicted_speedup` for each entry against the
+    transport's current wisdom and sorts descending by priority (ties
+    broken by (kernel, key) so every coordinator agrees). Entries whose
+    kernel is unknown on this host are dropped — a coordinator cannot
+    rank what it cannot score.
+
+    Example::
+
+        ranked = prioritize(aggregate_demand(bus), bus.transport)
+        jobs = coordinator.plan(ranked=ranked)
+    """
     out: list[ScenarioPriority] = []
     for entry in entries:
         est = predicted_speedup(entry.kernel, entry.key,

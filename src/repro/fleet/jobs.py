@@ -36,7 +36,21 @@ LEASE_TTL_S = 60.0
 
 @dataclass
 class TuningJob:
-    """One scenario's worth of sharded tuning work."""
+    """One scenario's worth of sharded tuning work.
+
+    The published spec every worker reads: which kernel/scenario to
+    tune, with what strategy and per-shard budget, split into
+    ``n_shards`` deterministic config-space shards. The shard set is a
+    pure function of this spec (never of the worker population), which
+    is what makes assembled results schedule-independent.
+
+    Example::
+
+        job = TuningJob(job_id=job_id_for("matmul", key), kernel="matmul",
+                        device_kind="tpu-v5e", problem=(256, 256, 256),
+                        dtype="float32", n_shards=4)
+        bus.publish("job", job.job_id, job.to_json())
+    """
     job_id: str
     kernel: str
     device_kind: str
@@ -90,13 +104,30 @@ class TuningJob:
 def job_id_for(kernel: str, key: ScenarioKey, round_: int = 0) -> str:
     """Deterministic job identity: same scenario + round -> same id on
     every coordinator, so concurrent planners collide into one job
-    instead of duplicating work."""
+    instead of duplicating work.
+
+    Example::
+
+        job_id_for("matmul", ("tpu-v5e", (256, 256, 256), "float32"))
+        # -> 'j-<10 hex chars>-r0'
+    """
     h = hashlib.sha256(f"{kernel}|{format_key(key)}".encode())
     return f"j-{h.hexdigest()[:10]}-r{round_}"
 
 
 def list_jobs(bus: ControlBus) -> list[TuningJob]:
-    """All published jobs, in coordinator priority order."""
+    """All published jobs, in coordinator priority order.
+
+    Workers iterate this to find claimable shards (highest-priority
+    first); the ``order`` field pins the coordinator's ranking so every
+    worker walks jobs in the same sequence.
+
+    Example::
+
+        for job in list_jobs(bus):
+            for shard_id in job.shard_ids():
+                ...
+    """
     jobs = [TuningJob.from_json(d) for d in bus.docs("job")]
     jobs.sort(key=lambda j: (j.order, j.job_id))
     return jobs
@@ -105,11 +136,30 @@ def list_jobs(bus: ControlBus) -> list[TuningJob]:
 # ------------------------------- leases -------------------------------------
 
 def lease_name(job_id: str, shard_id: str) -> str:
+    """Canonical ``job--shard`` document name: the shared key under
+    which one shard's lease, checkpointed state, and result live on
+    their respective channels. Example:
+    ``bus.fetch("result", lease_name(job.job_id, "s002"))``."""
     return f"{job_id}--{shard_id}"
 
 
 @dataclass
 class Lease:
+    """Ownership claim on one shard (a document on the ``lease`` channel).
+
+    Carries the claimant's identity plus a per-claim ``nonce`` — the
+    write-then-verify token that resolves claim races — and
+    ``expires_at``, after which a non-heartbeating holder is presumed
+    dead and the shard is reclaimable. ``claims`` counts hand-offs
+    across crashes.
+
+    Example::
+
+        lease = claim_shard(bus, job, "s000", "w1", clock)
+        heartbeat(bus, lease, clock)     # extend while tuning
+        release(bus, lease)              # mark done
+    """
+
     job_id: str
     shard_id: str
     worker: str
@@ -136,10 +186,19 @@ class Lease:
 class LeaseLost(RuntimeError):
     """The shard's lease no longer carries our nonce: it expired and was
     reclaimed (or lost the initial claim race). The holder must abandon
-    the shard — the new owner resumes from the last checkpoint."""
+    the shard — the new owner resumes from the last checkpoint.
+
+    Raised by :func:`heartbeat` and :func:`release`; workers catch it
+    around the whole shard run (for example
+    ``try: ... except LeaseLost: continue``) and move on to the next
+    claimable shard.
+    """
 
 
 def fetch_lease(bus: ControlBus, job_id: str, shard_id: str) -> Lease | None:
+    """Read one shard's current lease document, or None when the shard
+    has never been claimed. Read-only — status displays and claim
+    checks use it. Example: ``fetch_lease(bus, job.job_id, "s001")``."""
     doc = bus.fetch("lease", lease_name(job_id, shard_id))
     return Lease.from_json(doc) if doc is not None else None
 
@@ -166,6 +225,12 @@ def claim_shard(bus: ControlBus, job: TuningJob, shard_id: str,
     checkpoint, so the overwritten claimant aborts at its next
     checkpoint, and shard results are deterministic and assembly
     idempotent, so even a duplicated shard publishes identical bytes.
+
+    Example::
+
+        lease = claim_shard(bus, job, "s000", "w1", WallClock())
+        if lease is not None:
+            ...   # we own the shard until lease.expires_at
     """
     cur = fetch_lease(bus, job.job_id, shard_id)
     now = clock.now()
@@ -191,6 +256,10 @@ def heartbeat(bus: ControlBus, lease: Lease, clock: Clock,
     was reclaimed meanwhile — a stalled worker must never steal back a
     shard another worker is already tuning (that would both duplicate
     work and corrupt the ``claims`` hand-off count).
+
+    Example::
+
+        heartbeat(bus, lease, clock)     # at every checkpoint
     """
     _verify_owned(bus, lease)
     lease.expires_at = clock.now() + ttl_s
@@ -200,9 +269,18 @@ def heartbeat(bus: ControlBus, lease: Lease, clock: Clock,
 
 
 def release(bus: ControlBus, lease: Lease) -> None:
-    """Mark a shard finished; a done lease is never reclaimed. Raises
-    :class:`LeaseLost` when the lease was reclaimed meanwhile (the new
-    owner, not us, gets to finish the shard)."""
+    """Mark a shard finished; a done lease is never reclaimed.
+
+    Raises :class:`LeaseLost` when the lease was reclaimed meanwhile
+    (the new owner, not us, gets to finish the shard). Call only after
+    the shard's result document is published, so a "done" lease always
+    has a result behind it.
+
+    Example::
+
+        bus.publish("result", name, result_doc)
+        release(bus, lease)
+    """
     _verify_owned(bus, lease)
     lease.state = "done"
     bus.publish("lease", lease_name(lease.job_id, lease.shard_id),

@@ -36,7 +36,19 @@ DEMO_DEMAND: list[tuple[str, ScenarioKey, int]] = [
 
 @dataclass
 class FleetRunReport:
-    """What one local fleet run did, for assertions and CSV rows."""
+    """What one local fleet run did, for assertions and CSV rows.
+
+    Collects per-worker shard/eval tallies, final lease states, every
+    assembled wisdom document, and the coordinator's status — enough to
+    assert the orchestration invariants (disjoint shards, single-claim
+    leases, byte-identical wisdom) without re-reading the transport.
+
+    Example::
+
+        report = run_local_fleet(n_workers=3)
+        assert report.jobs_assembled
+        assert all(l.claims == 1 for l in report.leases.values())
+    """
     transport: Transport = None
     n_workers: int = 0
     steps: int = 0
@@ -80,6 +92,12 @@ def run_local_fleet(n_workers: int = 3,
     ``crash_worker``/``crash_after_evals`` kill one worker mid-shard; the
     run still completes (lease expiry + warm-start reclaim) as long as at
     least one worker survives.
+
+    Example::
+
+        report = run_local_fleet(n_workers=3, crash_worker="w1",
+                                 crash_after_evals=13)
+        assert report.crashes == 1 and report.jobs_assembled
     """
     transport = transport if transport is not None else MemoryTransport()
     bus = ControlBus(transport)

@@ -15,6 +15,13 @@ and publishes the shard result. Long shards are crash-safe:
 Configs outside the shard are rejected before they reach the evaluator,
 so shards stay disjoint even for strategies whose proposals are not
 drawn from the shard space (annealing starts at the space default).
+
+With a :class:`~repro.tunebench.DatasetStore` attached (``datasets=``),
+a worker additionally warm-starts each shard from the scenario's
+*recorded tuning-space dataset*: entries that fall inside the shard are
+replayed instead of re-measured (the same history plumbing crash
+recovery uses), so a fleet that has tuned a scenario before never pays
+for the same evaluation twice.
 """
 
 from __future__ import annotations
@@ -35,16 +42,42 @@ from .jobs import (LEASE_TTL_S, Lease, LeaseLost, TuningJob, claim_shard,
 
 
 class WorkerCrash(RuntimeError):
-    """Injected mid-shard failure (tests / chaos drills)."""
+    """Injected mid-shard failure (tests / chaos drills).
+
+    Raised by a worker constructed with ``crash_after_evals=N`` once its
+    next shard has run N live evaluations — *after* checkpointing them,
+    so the crash loses no measured work. The crash/reclaim e2e tests use
+    it to prove byte-identical assembly across worker deaths.
+
+    Example::
+
+        run_local_fleet(n_workers=3, crash_worker="w1",
+                        crash_after_evals=13)   # raises + reclaims inside
+    """
 
 
 class FleetWorker:
-    """Claims and runs one shard at a time from the control bus."""
+    """Claims and runs one shard at a time from the control bus.
+
+    The work loop is ``run_once`` (claim the highest-priority open
+    shard, tune it, publish) or ``drain`` (repeat until nothing is
+    claimable). Crash safety comes from lease heartbeats plus
+    checkpointed evaluation logs; ``datasets`` adds recorded-space
+    warm starts on top.
+
+    Example::
+
+        bus = ControlBus(DirectoryTransport("/mnt/shared/wisdom"))
+        worker = FleetWorker(bus, worker_id="host-3",
+                             datasets=DatasetStore("datasets"))
+        worker.drain()
+    """
 
     def __init__(self, bus: ControlBus, worker_id: str,
                  clock: Clock | None = None, ttl_s: float = LEASE_TTL_S,
                  checkpoint_every: int = 8,
-                 crash_after_evals: int | None = None):
+                 crash_after_evals: int | None = None,
+                 datasets=None):
         self.bus = bus
         self.worker_id = worker_id
         self.clock = clock or WallClock()
@@ -53,6 +86,9 @@ class FleetWorker:
         #: When set, raise WorkerCrash after this many live evaluations in
         #: the next shard (one-shot — consumed by the crash).
         self.crash_after_evals = crash_after_evals
+        #: Optional repro.tunebench DatasetStore: recorded spaces
+        #: warm-start shard sessions (replayed, never re-measured).
+        self.datasets = datasets
         self.shards_done: list[str] = []
         self.evals_run = 0
 
@@ -113,6 +149,22 @@ class FleetWorker:
         history = [evaluation_from_json(e)
                    for e in (state or {}).get("evaluations", [])]
         log: list[Evaluation] = list(history)
+        # Warm start: the scenario's recorded tuning-space dataset, if
+        # this worker has one. Only entries *inside* the shard are
+        # eligible (off-shard replays would leak measurements across the
+        # disjoint shard partition); checkpointed evaluations win on
+        # collision (they are this job's own lineage). Dataset history is
+        # replayed by the session but not re-published in checkpoints —
+        # every peer can read the same dataset itself.
+        if self.datasets is not None:
+            dataset = self.datasets.load_for(job.kernel, job.device_kind,
+                                             job.problem, job.dtype)
+            if dataset is not None:
+                from repro.tunebench import history_from_dataset
+                seen = {space.freeze(e.config) for e in history}
+                prior = [e for e in history_from_dataset(dataset, space)
+                         if space.freeze(e.config) not in seen]
+                history = prior + history
         live = 0
 
         def checkpoint() -> None:
@@ -147,6 +199,13 @@ class FleetWorker:
             return r
 
         result = self._run_strategy(job, shard_id, space, evaluate, history)
+        # Ownership check BEFORE the result write (raises LeaseLost). The
+        # claim-race safety argument in jobs.claim_shard assumes duplicate
+        # shard runs publish identical bytes; dataset warm-starts are
+        # per-worker, so a stalled holder's un-warm-started session may
+        # have found a *different* (equally valid) result and must not
+        # clobber the reclaiming owner's published one.
+        heartbeat(self.bus, lease, self.clock, self.ttl_s)
         self._publish_result(job, shard_id, name, result)
         release(self.bus, lease)
 

@@ -6,7 +6,8 @@ budget. Objectives: analytical simulated-TPU cost model (default on this
 CPU-only container) or wall-clock execution (real TPU / interpret mode).
 """
 
-from .costmodel import CostModel, kernel_time
+from .costmodel import (CostModel, FittedCostModel, fit_from_dataset,
+                        kernel_time)
 from .runner import CostModelEvaluator, WallClockEvaluator, EvalResult
 from .strategies import (STRATEGIES, Evaluation, TuningResult,
                          evaluation_from_json, evaluation_to_json,
@@ -15,7 +16,7 @@ from .strategies import (STRATEGIES, Evaluation, TuningResult,
 from .tune import tune_capture, tune_kernel
 
 __all__ = [
-    "CostModel", "kernel_time",
+    "CostModel", "FittedCostModel", "fit_from_dataset", "kernel_time",
     "CostModelEvaluator", "WallClockEvaluator", "EvalResult",
     "STRATEGIES", "Evaluation", "TuningResult",
     "evaluation_from_json", "evaluation_to_json",

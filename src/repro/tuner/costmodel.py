@@ -31,9 +31,12 @@ from __future__ import annotations
 import hashlib
 import math
 import struct
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+
+import numpy as np
 
 from repro.core.device import DeviceSpec
+from repro.core.param import Config, ConfigSpace
 from repro.core.workload import Workload
 
 INFEASIBLE = float("inf")
@@ -61,6 +64,22 @@ def _hash_noise(key: str, sigma: float) -> float:
 
 @dataclass(frozen=True)
 class CostModel:
+    """Analytical simulated-TPU objective for one device.
+
+    ``time(workload, dtype)`` returns simulated seconds for one launch
+    (``INFEASIBLE`` when the working set blows past the spill grace),
+    combining roofline compute/memory terms, MXU/VPU alignment and ILP
+    efficiencies, per-program overhead, and a deterministic
+    config-hashed noise term that makes the landscape rugged but
+    perfectly reproducible (see the module docstring for the formulas).
+
+    Example::
+
+        m = CostModel(get_device("tpu-v5e"), noise_sigma=0)
+        t = m.time(builder.make_workload(cfg, (256, 256, 256), "float32"),
+                   "float32")
+    """
+
     device: DeviceSpec
     noise_sigma: float = 0.05
     pipeline_depth: int = 4      # stages hidden by full unrolling
@@ -128,4 +147,88 @@ class CostModel:
 
 def kernel_time(workload: Workload, device: DeviceSpec, dtype: str,
                 noise_key: str = "") -> float:
+    """One-shot convenience: simulated seconds for one launch on
+    ``device`` (a fresh default :class:`CostModel` each call).
+
+    Example::
+
+        t = kernel_time(builder.make_workload(cfg, problem, "float32"),
+                        get_device("tpu-v5e"), "float32")
+    """
     return CostModel(device).time(workload, dtype, noise_key)
+
+
+# --------------------- data-driven surrogate (tunebench) ---------------------
+
+@dataclass
+class FittedCostModel:
+    """Surrogate objective fitted from a recorded tuning-space dataset.
+
+    Ridge regression of log-score on the unit-encoded config (linear +
+    quadratic terms), so prediction needs only the config — no workload
+    hook, no device table. It is deliberately crude: the point is a
+    *cheap, data-grounded* screen (e.g. ranking candidates before live
+    trials), not replacing the recorded scores themselves. ``rmse_log``
+    reports training error in log-space; compare against
+    ``baseline_rmse_log`` (a constant predictor) to judge whether the
+    fit learned anything.
+
+    Example::
+
+        model = fit_from_dataset(SpaceDataset.load("matmul.space.json"))
+        ranked = sorted(space.enumerate(), key=model.predict)
+    """
+
+    space: ConfigSpace
+    weights: np.ndarray
+    mean_log: float
+    rmse_log: float
+    baseline_rmse_log: float
+    n_samples: int = 0
+    _dim: int = field(default=0)
+
+    def _features(self, config: Config) -> np.ndarray:
+        u = self.space.to_unit(config)
+        return np.concatenate([[1.0], u, u * u])
+
+    def predict(self, config: Config) -> float:
+        """Predicted objective value (microseconds) for ``config``."""
+        return float(math.exp(self._features(config) @ self.weights
+                              + self.mean_log))
+
+
+def fit_from_dataset(dataset, ridge: float = 1e-3) -> FittedCostModel:
+    """Fit a :class:`FittedCostModel` from a recorded space.
+
+    ``dataset`` is any object with the :class:`~repro.tunebench.SpaceDataset`
+    query surface (``space()`` and ``feasible()``); the fit uses every
+    feasible entry. Raises ``ValueError`` with fewer than 3 feasible
+    evaluations — below that a surrogate is noise.
+
+    Example::
+
+        ds = SpaceDataset.load("datasets/matmul--....space.json")
+        model = fit_from_dataset(ds)
+        model.predict({"block_m": 128, ...})
+    """
+    feas = dataset.feasible()
+    if len(feas) < 3:
+        raise ValueError(
+            f"need at least 3 feasible evaluations to fit, have {len(feas)}")
+    space = dataset.space()
+    x = np.stack([np.concatenate([[1.0], u, u * u]) for u in
+                  (space.to_unit(e.config) for e in feas)])
+    y = np.log(np.array([e.score_us for e in feas]))
+    mean_log = float(y.mean())
+    yc = y - mean_log
+    # ridge: (X'X + lam I) w = X'y  (bias column unpenalized via lam on all
+    # is fine at this scale)
+    dim = x.shape[1]
+    gram = x.T @ x + ridge * np.eye(dim)
+    weights = np.linalg.solve(gram, x.T @ yc)
+    resid = x @ weights - yc
+    return FittedCostModel(
+        space=space, weights=weights, mean_log=mean_log,
+        rmse_log=float(np.sqrt(np.mean(resid**2))),
+        baseline_rmse_log=float(np.sqrt(np.mean(yc**2))),
+        n_samples=len(feas), _dim=dim)

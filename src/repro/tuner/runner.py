@@ -5,6 +5,12 @@ model; ``WallClockEvaluator`` actually executes the built kernel (interpret
 mode on CPU, native Pallas on TPU) and times it. Both optionally *verify* the
 kernel's output against the ``ref.py`` oracle on replayed capture data —
 the paper's "output verification" option in Kernel Tuner.
+
+Both evaluators also take ``record_to``: any object with a
+``record(config, EvalResult)`` method — in practice a
+:class:`~repro.tunebench.SpaceDataset` — receives every evaluation
+(feasible or not) as it happens, turning any tuning session into a
+recorded search space that can later be replayed without hardware.
 """
 
 from __future__ import annotations
@@ -27,6 +33,21 @@ VERIFY_BYTES_LIMIT = 64 * 2**20  # skip in-loop verification beyond this
 
 @dataclass
 class EvalResult:
+    """Outcome of evaluating one configuration.
+
+    ``score_us`` is the objective value in microseconds (lower is
+    better; ``inf`` when infeasible), ``feasible`` says whether the
+    config can run at all (restrictions, VMEM, failed verification and
+    build errors all make it False — ``error`` says which), and
+    ``verified`` records output verification (None = not checked).
+
+    Example::
+
+        r = evaluator({"block_m": 128, "block_n": 128})
+        if r.feasible:
+            print(f"{r.score_us:.1f}us")
+    """
+
     score_us: float
     feasible: bool
     verified: bool | None = None   # None = not checked
@@ -73,12 +94,26 @@ def verify_against_reference(builder: KernelBuilder, config: Config,
 
 
 class CostModelEvaluator:
-    """Default objective on CPU hosts: analytical model + optional verify."""
+    """Default objective on CPU hosts: analytical model + optional verify.
+
+    Scores a config by running the kernel's ``workload`` hook through the
+    deterministic simulated-TPU :class:`~repro.tuner.costmodel.CostModel`
+    for ``device`` — no execution, so it is safe (and fast) on machines
+    without the accelerator. With ``verify_args`` (typically a capture's
+    replayed arguments) each distinct config is additionally executed
+    once in interpret mode and checked against the reference oracle.
+
+    Example::
+
+        ev = CostModelEvaluator(get_kernel("matmul"), (256, 256, 256),
+                                "float32", "tpu-v5e", verify="none")
+        score = ev(builder.default_config()).score_us
+    """
 
     def __init__(self, builder: KernelBuilder, problem: tuple[int, ...],
                  dtype: str, device: DeviceSpec | str,
                  verify_args: Sequence[np.ndarray] | None = None,
-                 verify: str = "auto") -> None:
+                 verify: str = "auto", record_to=None) -> None:
         self.builder = builder
         self.problem = tuple(problem)
         self.dtype = dtype
@@ -86,6 +121,9 @@ class CostModelEvaluator:
         self.model = CostModel(self.device)
         self.verify_args = verify_args
         self.verify = verify
+        #: Optional dataset recorder: ``record(config, EvalResult)`` is
+        #: called for every evaluation (see repro.tunebench).
+        self.record_to = record_to
         self._verified_cache: dict[tuple, tuple[bool, str]] = {}
 
     def _should_verify(self) -> bool:
@@ -96,16 +134,23 @@ class CostModelEvaluator:
         nbytes = sum(int(np.asarray(a).nbytes) for a in self.verify_args)
         return nbytes <= VERIFY_BYTES_LIMIT
 
+    def _record(self, config: Config, result: EvalResult) -> EvalResult:
+        if self.record_to is not None:
+            self.record_to.record(config, result)
+        return result
+
     def __call__(self, config: Config) -> EvalResult:
         if not self.builder.space.is_valid(config):
-            return EvalResult(INFEASIBLE, False, error="restricted")
+            return self._record(
+                config, EvalResult(INFEASIBLE, False, error="restricted"))
         w = self.builder.make_workload(config, self.problem, self.dtype)
         key = "|".join(f"{k}={config[k]}" for k in sorted(config))
         key += f"|{self.problem}|{self.dtype}"
         t = self.model.time(w, self.dtype, noise_key=key)
         if not np.isfinite(t):
-            return EvalResult(INFEASIBLE, False, error="vmem overflow",
-                              info={"vmem_bytes": w.vmem_bytes})
+            return self._record(
+                config, EvalResult(INFEASIBLE, False, error="vmem overflow",
+                                   info={"vmem_bytes": w.vmem_bytes}))
         verified: bool | None = None
         if self._should_verify():
             fkey = self.builder.space.freeze(config)
@@ -115,18 +160,34 @@ class CostModelEvaluator:
             ok, msg = self._verified_cache[fkey]
             verified = ok
             if not ok:
-                return EvalResult(INFEASIBLE, False, verified=False,
-                                  error=msg)
-        return EvalResult(t * 1e6, True, verified=verified,
-                          info={"workload": w})
+                return self._record(
+                    config, EvalResult(INFEASIBLE, False, verified=False,
+                                       error=msg))
+        return self._record(
+            config, EvalResult(t * 1e6, True, verified=verified,
+                               info={"workload": w}))
 
 
 class WallClockEvaluator:
-    """Measure actual execution time (real hardware, or interpret mode)."""
+    """Measure actual execution time (real hardware, or interpret mode).
+
+    Builds and jits the kernel for each config, runs a warmup plus
+    ``repeats`` timed executions on the concrete ``args`` (typically a
+    capture's replayed data), and scores the best of the repeats — the
+    paper's measured objective. On non-TPU hosts it falls back to Pallas
+    interpret mode automatically, so the same tuning script runs
+    anywhere (slowly, but with real execution semantics).
+
+    Example::
+
+        cap = load_capture("captures/matmul-....capture.json")
+        ev = WallClockEvaluator(get_kernel(cap.kernel_name), cap.args)
+        result = ev(config)     # EvalResult with measured score_us
+    """
 
     def __init__(self, builder: KernelBuilder, args: Sequence[np.ndarray],
                  interpret: bool | None = None, repeats: int = 3,
-                 verify: bool = True) -> None:
+                 verify: bool = True, record_to=None) -> None:
         self.builder = builder
         self.args = [np.asarray(a) for a in args]
         if interpret is None:
@@ -134,17 +195,27 @@ class WallClockEvaluator:
         self.interpret = interpret
         self.repeats = repeats
         self.verify = verify
+        #: Optional dataset recorder: ``record(config, EvalResult)`` is
+        #: called for every evaluation (see repro.tunebench).
+        self.record_to = record_to
+
+    def _record(self, config: Config, result: EvalResult) -> EvalResult:
+        if self.record_to is not None:
+            self.record_to.record(config, result)
+        return result
 
     def __call__(self, config: Config) -> EvalResult:
         if not self.builder.space.is_valid(config):
-            return EvalResult(INFEASIBLE, False, error="restricted")
+            return self._record(
+                config, EvalResult(INFEASIBLE, False, error="restricted"))
         meta = args_meta(*self.args)
         if self.verify:
             ok, msg = verify_against_reference(
                 self.builder, config, self.args, interpret=self.interpret)
             if not ok:
-                return EvalResult(INFEASIBLE, False, verified=False,
-                                  error=msg)
+                return self._record(
+                    config, EvalResult(INFEASIBLE, False, verified=False,
+                                       error=msg))
         try:
             fn = self.builder.make(config, meta, interpret=self.interpret)
             compiled = jax.jit(fn).lower(*meta).compile()
@@ -154,8 +225,10 @@ class WallClockEvaluator:
                 t0 = time.perf_counter()
                 jax.block_until_ready(compiled(*self.args))
                 times.append(time.perf_counter() - t0)
-            return EvalResult(min(times) * 1e6, True,
-                              verified=True if self.verify else None)
+            return self._record(
+                config, EvalResult(min(times) * 1e6, True,
+                                   verified=True if self.verify else None))
         except Exception as e:  # noqa: BLE001
-            return EvalResult(INFEASIBLE, False,
-                              error=f"{type(e).__name__}: {e}")
+            return self._record(
+                config, EvalResult(INFEASIBLE, False,
+                                   error=f"{type(e).__name__}: {e}"))

@@ -32,6 +32,19 @@ Evaluate = Callable[[Config], EvalResult]
 
 @dataclass
 class Evaluation:
+    """One evaluated config inside a tuning session.
+
+    The session-level record (config, score, feasibility, cumulative
+    wall time when measured) — what trajectories are computed from,
+    what fleet workers checkpoint, and what warm-start ``history``
+    lists are made of.
+
+    Example::
+
+        e = Evaluation(config={"x": 3}, score_us=12.5, feasible=True,
+                       wall_s=0.0)
+    """
+
     config: Config
     score_us: float
     feasible: bool
@@ -40,12 +53,33 @@ class Evaluation:
 
 
 def evaluation_to_json(e: Evaluation) -> dict:
+    """Serialize an :class:`Evaluation` for transport/checkpointing.
+
+    The wire form fleet workers publish on the ``state`` channel and
+    datasets/warm-starts round-trip through; inverse of
+    :func:`evaluation_from_json`.
+
+    Example::
+
+        doc = evaluation_to_json(e)
+        assert evaluation_from_json(doc) == e
+    """
     return {"config": dict(e.config), "score_us": e.score_us,
             "feasible": bool(e.feasible), "wall_s": e.wall_s,
             "error": e.error}
 
 
 def evaluation_from_json(d: dict) -> Evaluation:
+    """Rebuild an :class:`Evaluation` from its JSON wire form.
+
+    Tolerates missing optional fields (``wall_s``, ``error``) so
+    checkpoints written by older workers still load.
+
+    Example::
+
+        history = [evaluation_from_json(d) for d in state["evaluations"]]
+        tune_bayes(space, evaluate, history=history, ...)
+    """
     return Evaluation(config=dict(d["config"]),
                       score_us=float(d["score_us"]),
                       feasible=bool(d["feasible"]),
@@ -55,6 +89,21 @@ def evaluation_from_json(d: dict) -> Evaluation:
 
 @dataclass
 class TuningResult:
+    """What one tuning session found: the winner plus the full log.
+
+    ``best_config`` is None when nothing feasible was seen (then
+    ``best_score_us`` is ``inf``). ``evaluations`` is the complete
+    session log in evaluation order — the raw material for convergence
+    trajectories, dataset recording, and warm starts.
+
+    Example::
+
+        res = tune_bayes(space, evaluate, max_evals=100)
+        print(res.best_score_us, len(res.evaluations))
+        for wall_s, best in res.trajectory():
+            ...
+    """
+
     strategy: str
     best_config: Config | None
     best_score_us: float
@@ -149,6 +198,17 @@ def tune_random(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
                 rng: np.random.Generator | None = None,
                 time_budget_s: float | None = None,
                 history: Sequence[Evaluation] | None = None) -> TuningResult:
+    """Random search — the unbiased baseline (paper Fig 2's histograms).
+
+    Rejection-samples valid configs uniformly; when the budget covers
+    the whole space it switches to shuffled exhaustive enumeration so
+    small spaces are covered without duplicate proposals.
+
+    Example::
+
+        res = tune_random(builder.space, evaluator, max_evals=200,
+                          rng=np.random.default_rng(0))
+    """
     rng = rng or np.random.default_rng(0)
     if space.cardinality() <= max_evals:
         # budget covers the whole space: shuffled exhaustive enumeration
@@ -171,6 +231,17 @@ def tune_exhaustive(space: ConfigSpace, evaluate: Evaluate,
                     limit: int = 100_000,
                     history: Sequence[Evaluation] | None = None
                     ) -> TuningResult:
+    """Enumerate the valid space in lexicographic order (capped).
+
+    The only strategy guaranteed to find the true optimum — when the
+    space fits the ``limit``. Used for small spaces, fleet shards, and
+    recording complete tuning-space datasets.
+
+    Example::
+
+        res = tune_exhaustive(builder.space, evaluator, limit=1000)
+        assert res.best_config is not None
+    """
     s = _Session(space, evaluate, limit, None, history)
     for cfg in space.enumerate(limit=limit):
         if s.exhausted():
@@ -184,7 +255,19 @@ def tune_anneal(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
                 time_budget_s: float | None = None,
                 t0: float = 0.3, t1: float = 0.01,
                 history: Sequence[Evaluation] | None = None) -> TuningResult:
-    """Simulated annealing over single-parameter mutations."""
+    """Simulated annealing over single-parameter mutations.
+
+    A local search that accepts worse neighbors with probability
+    ``exp(-relative_regression / temperature)``; the temperature decays
+    geometrically from ``t0`` to ``t1`` over the eval budget, and the
+    walk periodically restarts from the incumbent best. Strong on
+    rugged landscapes where most of the space is bad but optima cluster.
+
+    Example::
+
+        res = tune_anneal(builder.space, evaluator, max_evals=200,
+                          rng=np.random.default_rng(0))
+    """
     rng = rng or np.random.default_rng(0)
     s = _Session(space, evaluate, max_evals, time_budget_s, history)
     cur = s.run(space.default_config())
@@ -245,8 +328,21 @@ def tune_bayes(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
                time_budget_s: float | None = None,
                n_init: int = 12, pool: int = 256,
                history: Sequence[Evaluation] | None = None) -> TuningResult:
-    """GP + expected improvement over the unit-encoded config space
-    (the paper's default strategy, per Willemsen et al. [28])."""
+    """Bayesian optimization: GP + expected improvement over the
+    unit-encoded config space (the paper's default strategy, per
+    Willemsen et al. [28]).
+
+    After ``n_init`` seeding evaluations, each step fits a pure-numpy
+    RBF Gaussian process to the (log-scored, normalized) feasible
+    history and evaluates the candidate — drawn from a random pool plus
+    neighbors of the incumbent — with the highest expected improvement.
+    The strategy of choice when evaluations are expensive.
+
+    Example::
+
+        res = tune_bayes(builder.space, evaluator, max_evals=200,
+                         rng=np.random.default_rng(0))
+    """
     rng = rng or np.random.default_rng(0)
     s = _Session(space, evaluate, max_evals, time_budget_s, history)
     # Latin-ish init: default + random
@@ -283,6 +379,11 @@ def tune_bayes(space: ConfigSpace, evaluate: Evaluate, max_evals: int = 200,
     return s.result("bayes")
 
 
+#: Strategy registry: name -> callable, the lookup every CLI flag, job
+#: spec, and harness strategy list goes through. All entries share the
+#: signature ``(space, evaluate, ..., history=None) -> TuningResult``
+#: (``tune_exhaustive`` takes ``limit`` instead of ``max_evals``/``rng``).
+#: E.g. ``STRATEGIES["bayes"](space, evaluate, max_evals=100)``.
 STRATEGIES: dict[str, Callable[..., TuningResult]] = {
     "random": tune_random,
     "bayes": tune_bayes,

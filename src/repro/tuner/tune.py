@@ -45,25 +45,69 @@ def tune_kernel(builder: KernelBuilder, problem: tuple[int, ...], dtype: str,
                 wisdom_dir: Path | str | None = None,
                 write_wisdom: bool = True,
                 seed: int = 0,
-                store: WisdomStore | None = None) -> TuningResult:
+                store: WisdomStore | None = None,
+                record_dataset: Path | str | None = None) -> TuningResult:
     """Tune one scenario; optionally record the winner in the wisdom file.
 
     Writes go through a :class:`~repro.distrib.WisdomStore` (``store``
     wins over ``wisdom_dir``): tuning output gets the same schema
     versioning/migration guarantees the fleet sync layer relies on.
+
+    ``record_dataset`` additionally records *every* evaluation of the
+    session (not just the winner) into a
+    :class:`~repro.tunebench.SpaceDataset`: pass a directory (one
+    scenario-named file per dataset, merged with any prior recording) or
+    an explicit ``*.space.json`` path. Recorded spaces feed the
+    simulated strategy benchmark (``python -m repro.tunebench``) and
+    warm-start fleet shard sessions.
+
+    Example::
+
+        res = tune_kernel(get_kernel("matmul"), (256, 256, 256),
+                          "float32", "tpu-v5e", strategy="bayes",
+                          max_evals=100, record_dataset="datasets")
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; "
                          f"have {sorted(STRATEGIES)}")
+    dataset = dataset_path = None
+    if record_dataset is not None:
+        # Local import: tunebench builds on the tuner's primitives.
+        from repro.tunebench import (DATASET_SUFFIX, DatasetStore,
+                                     SpaceDataset)
+        path = Path(record_dataset)
+        if str(path).endswith(DATASET_SUFFIX) or path.suffix == ".json":
+            dataset_path = path
+        else:
+            dataset_path = DatasetStore(path).path_for(
+                builder.name, device_kind, problem, dtype)
+        if dataset_path.exists():
+            dataset = SpaceDataset.load(dataset_path)   # merge into prior
+            # Merging across scenarios (or objectives) would mix
+            # incomparable scores under one header — and a foreign param
+            # table would crash key derivation mid-session. Refuse now.
+            want = (builder.name, tuple(problem), dtype, device_kind,
+                    objective)
+            have = (dataset.kernel, dataset.problem_size, dataset.dtype,
+                    dataset.device_kind, dataset.objective)
+            if want != have:
+                raise ValueError(
+                    f"dataset {dataset_path} records scenario {have}, "
+                    f"cannot merge a {want} session into it")
+        else:
+            dataset = SpaceDataset(builder.name, builder.space, problem,
+                                   dtype, device_kind, objective=objective)
     if objective == "costmodel":
         evaluate = CostModelEvaluator(builder, problem, dtype,
                                       get_device(device_kind),
-                                      verify_args=verify_args)
+                                      verify_args=verify_args,
+                                      record_to=dataset)
     elif objective == "wallclock":
         if verify_args is None:
             raise ValueError("wallclock objective needs concrete args "
                              "(use a capture)")
-        evaluate = WallClockEvaluator(builder, verify_args)
+        evaluate = WallClockEvaluator(builder, verify_args,
+                                      record_to=dataset)
     else:
         raise ValueError(f"unknown objective {objective!r}")
 
@@ -71,6 +115,9 @@ def tune_kernel(builder: KernelBuilder, problem: tuple[int, ...], dtype: str,
     result = STRATEGIES[strategy](builder.space, evaluate,
                                   max_evals=max_evals, rng=rng,
                                   time_budget_s=time_budget_s)
+    if dataset is not None:
+        dataset.provenance.setdefault("recorder", "tune_kernel")
+        dataset.save(dataset_path)
     if write_wisdom and result.best_config is not None:
         dev = get_device(device_kind)
         if store is None:
@@ -94,16 +141,27 @@ def tune_capture(capture: Path | str | Capture, device_kind: str,
                  objective: str = "costmodel",
                  wisdom_dir: Path | str | None = None,
                  seed: int = 0,
-                 store: WisdomStore | None = None) -> TuningResult:
+                 store: WisdomStore | None = None,
+                 record_dataset: Path | str | None = None) -> TuningResult:
     """Replay a captured launch through the tuner (paper §4.2/§4.3).
-    Accepts a capture file path or an already-loaded :class:`Capture`."""
+
+    Accepts a capture file path or an already-loaded :class:`Capture`;
+    the capture supplies the problem size, dtype and concrete arguments
+    (for verification or the wallclock objective), so no hand-written
+    tuning script or synthetic data is needed.
+
+    Example::
+
+        res = tune_capture("captures/matmul-1.capture.json", "tpu-v5e",
+                           strategy="bayes", max_evals=100)
+    """
     cap = capture if isinstance(capture, Capture) else load_capture(capture)
     builder = get_kernel(cap.kernel_name)
     return tune_kernel(builder, cap.problem_size, cap.dtype, device_kind,
                        strategy=strategy, max_evals=max_evals,
                        time_budget_s=time_budget_s, verify_args=cap.args,
                        objective=objective, wisdom_dir=wisdom_dir, seed=seed,
-                       store=store)
+                       store=store, record_dataset=record_dataset)
 
 
 def plan_captures(paths: Sequence[str], device_kind: str
@@ -144,6 +202,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--objective", default="costmodel",
                     choices=("costmodel", "wallclock"))
     ap.add_argument("--wisdom-dir", default=None)
+    ap.add_argument("--record-dataset", default=None, metavar="DIR",
+                    help="also record every evaluation into a tuning-space "
+                         "dataset directory (see docs/tuning-datasets.md)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dry-run", action="store_true",
                     help="print the deduplicated scenario plan and exit "
@@ -170,7 +231,8 @@ def main(argv: list[str] | None = None) -> int:
                            max_evals=args.budget_evals,
                            time_budget_s=args.budget_seconds,
                            objective=args.objective,
-                           wisdom_dir=args.wisdom_dir, seed=args.seed)
+                           wisdom_dir=args.wisdom_dir, seed=args.seed,
+                           record_dataset=args.record_dataset)
         print(f"{scenario_paths[0]}: best={res.best_score_us:.2f}us "
               f"evals={len(res.evaluations)} config={res.best_config}")
         for skipped in scenario_paths[1:]:

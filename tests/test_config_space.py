@@ -80,3 +80,83 @@ def test_freeze_is_hashable_and_stable():
     c = s.default_config()
     assert s.freeze(c) == s.freeze(dict(reversed(list(c.items()))))
     {s.freeze(c): 1}
+
+
+# ----------------- config_hash / shard edge cases (ISSUE 4) -----------------
+
+
+def test_config_hash_ignores_dict_ordering():
+    s = make_space()
+    c = s.default_config()
+    reordered = dict(reversed(list(c.items())))
+    assert s.config_hash(c) == s.config_hash(reordered)
+
+
+def test_config_hash_is_cross_process_stable():
+    """Shard membership must agree between machines and runs: the hash
+    is pinned to a literal so any derivation change (which would tear
+    every in-flight fleet job's shards apart — and orphan every recorded
+    dataset's entry keys) fails loudly here."""
+    s = ConfigSpace()
+    s.tune("block_x", (16, 32, 64, 128), default=32)
+    s.tune("flag", (True, False))
+    assert s.config_hash({"block_x": 16, "flag": True}) \
+        == 0x7375c74b6b75025f
+    assert ConfigSpace().config_hash({}) == 0x0caa2b8ca1cd534f
+
+
+def test_empty_space_hash_enumerate_shard():
+    s = ConfigSpace()
+    assert s.cardinality() == 1                  # the empty product
+    assert list(s.enumerate()) == [{}]
+    sub = s.shard(0, 1)
+    assert list(sub.enumerate()) == [{}]
+    # with n_shards > 1 exactly one shard owns the single (empty) config
+    owners = [i for i in range(3)
+              if list(s.shard(i, 3).enumerate())]
+    assert len(owners) == 1
+
+
+def test_shard_count_exceeding_config_count():
+    s = ConfigSpace()
+    s.tune("x", (0, 1, 2))                       # 3 valid configs
+    n_shards = 8
+    shards = [list(s.shard(i, n_shards).enumerate())
+              for i in range(n_shards)]
+    everything = [tuple(sorted(c.items())) for sh in shards for c in sh]
+    # disjoint union == the whole space; surplus shards are just empty
+    assert sorted(everything) == sorted(
+        tuple(sorted(c.items())) for c in s.enumerate())
+    assert len(everything) == len(set(everything)) == 3
+    assert sum(1 for sh in shards if not sh) >= n_shards - 3
+
+
+def test_shard_partition_is_exact_and_deterministic():
+    s = make_space()
+    valid = [tuple(sorted(c.items())) for c in s.enumerate()]
+    for n in (1, 2, 5):
+        parts = [[tuple(sorted(c.items()))
+                  for c in s.shard(i, n).enumerate()] for i in range(n)]
+        flat = [c for p in parts for c in p]
+        assert sorted(flat) == sorted(valid)          # union, no overlap
+        # re-derived shards are identical (replanning safety)
+        again = [[tuple(sorted(c.items()))
+                  for c in s.shard(i, n).enumerate()] for i in range(n)]
+        assert parts == again
+
+
+def test_shard_index_validation():
+    s = make_space()
+    with pytest.raises(ValueError):
+        s.shard(-1, 4)
+    with pytest.raises(ValueError):
+        s.shard(4, 4)
+    with pytest.raises(ValueError):
+        s.shard(0, 0)
+
+
+def test_shard_keeps_parent_restrictions():
+    s = make_space()
+    for i in range(4):
+        for cfg in s.shard(i, 4).enumerate():
+            assert s.is_valid(cfg)

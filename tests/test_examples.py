@@ -1,0 +1,73 @@
+"""ISSUE 4 satellite: every example runs headless, end to end.
+
+Each example executes as a subprocess with a tmpdir working directory
+(so relative output paths like capture/checkpoint dirs never touch the
+repo) and CPU-only JAX. Examples with CLI knobs run at smoke scale;
+the assertions check the banner lines the examples print on success,
+not just the exit code.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+EXAMPLES = REPO / "examples"
+
+# Pre-existing state (a developer may legitimately have run the README
+# quickstart from the repo root): the tests only assert that *they*
+# created nothing new in the repo.
+_PREEXISTING = {d: (REPO / d).exists() for d in ("captures", "checkpoints",
+                                                 "wisdom", "datasets")}
+
+#: example file -> (argv builder, string that must appear in stdout)
+CASES = {
+    "quickstart.py": (lambda tmp: [], "launch #2: tier=exact"),
+    "tune_microhh.py": (lambda tmp: ["--max-evals", "20"],
+                        "runtime selection"),
+    "online_serving.py": (lambda tmp: [], "promoted after"),
+    "serve_lm.py": (lambda tmp: ["--requests", "2", "--slots", "2",
+                                 "--max-new", "4"], "tok/s"),
+    "train_lm.py": (lambda tmp: ["--steps", "3", "--batch", "4",
+                                 "--seq", "64",
+                                 "--ckpt-dir", str(tmp / "ckpt")],
+                    "final checkpoint"),
+}
+
+
+def test_every_example_is_covered():
+    """A new example must get a smoke case (or consciously opt out)."""
+    found = {p.name for p in EXAMPLES.glob("*.py")}
+    assert found == set(CASES), (
+        f"examples without a smoke case: {sorted(found - set(CASES))}; "
+        f"stale cases: {sorted(set(CASES) - found)}")
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_example_runs_headless(name, tmp_path):
+    argv, needle = CASES[name]
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src"),
+               JAX_PLATFORMS="cpu")
+    # examples must not depend on ambient tuning state
+    for var in ("KERNEL_LAUNCHER_CAPTURE", "KERNEL_LAUNCHER_CAPTURE_DIR",
+                "KERNEL_LAUNCHER_WISDOM_DIR", "KERNEL_LAUNCHER_ONLINE"):
+        env.pop(var, None)
+    proc = subprocess.run(
+        [sys.executable, str(EXAMPLES / name), *argv(tmp_path)],
+        cwd=tmp_path, env=env, capture_output=True, text=True,
+        timeout=600)
+    assert proc.returncode == 0, (
+        f"{name} failed:\n--- stdout ---\n{proc.stdout[-4000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-4000:]}")
+    assert needle in proc.stdout, (
+        f"{name} ran but did not print {needle!r}:\n{proc.stdout[-4000:]}")
+    # headless means headless: nothing may escape into the repo
+    escaped = [d for d, existed in _PREEXISTING.items()
+               if not existed and (REPO / d).exists()]
+    assert not escaped, f"{name} wrote into the repo: {escaped}"

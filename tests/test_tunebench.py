@@ -1,0 +1,401 @@
+"""Recorded tuning-space datasets + simulated strategy benchmarking."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ConfigSpace, get_kernel
+from repro.distrib.sync import MemoryTransport
+from repro.fleet import ControlBus, FleetWorker, ManualClock, TuningJob
+from repro.fleet.jobs import lease_name
+from repro.tunebench import (DATASET_VERSION, DatasetMiss, DatasetStore,
+                             DatasetVersionError, SimulatedRunner,
+                             SpaceDataset, compare, dump_report,
+                             fraction_curve, history_from_dataset,
+                             migrate_dataset_doc, record_space,
+                             run_on_dataset)
+from repro.tuner import (CostModelEvaluator, fit_from_dataset, tune_kernel,
+                         tune_random)
+
+
+def small_space() -> ConfigSpace:
+    s = ConfigSpace()
+    s.tune("x", (0, 1, 2, 3), default=0)
+    s.tune("y", (0, 1, 2), default=0)
+    return s
+
+
+def quadratic_dataset() -> SpaceDataset:
+    """Known landscape: score = (x-2)^2 + (y-1)^2 + 1, optimum at (2,1)."""
+    s = small_space()
+    ds = SpaceDataset("quad", s, (8, 8), "float32", "tpu-v5e")
+    for cfg in s.enumerate():
+        score = (cfg["x"] - 2) ** 2 + (cfg["y"] - 1) ** 2 + 1.0
+        ds.add(cfg, score, "ok")
+    return ds
+
+
+# ------------------------------- dataset ---------------------------------
+
+
+def test_add_keeps_best_outcome():
+    s = small_space()
+    ds = SpaceDataset("k", s, (8, 8), "float32", "tpu-v5e")
+    cfg = {"x": 1, "y": 1}
+    ds.add(cfg, 10.0, "ok")
+    ds.add(cfg, float("inf"), "infeasible", error="later failure")
+    assert ds.lookup(cfg).score_us == 10.0          # ok beats infeasible
+    ds.add(cfg, 5.0, "ok")
+    assert ds.lookup(cfg).score_us == 5.0           # lower ok wins
+    ds.add(cfg, 7.0, "ok")
+    assert ds.lookup(cfg).score_us == 5.0
+    assert len(ds) == 1
+
+
+def test_best_and_feasible():
+    ds = quadratic_dataset()
+    assert len(ds) == 12
+    best = ds.best()
+    assert best.score_us == 1.0
+    assert best.config == {"x": 2, "y": 1}
+    assert len(ds.feasible()) == 12
+
+
+def test_roundtrip_is_byte_stable(tmp_path):
+    ds = quadratic_dataset()
+    p1 = ds.save(tmp_path / "a.space.json")
+    ds2 = SpaceDataset.load(p1)
+    p2 = ds2.save(tmp_path / "b.space.json")
+    assert p1.read_bytes() == p2.read_bytes()
+    assert ds2.best().config == ds.best().config
+    assert ds2.space().names == ds.space().names
+
+
+def test_key_mismatch_refused(tmp_path):
+    ds = quadratic_dataset()
+    path = ds.save(tmp_path / "d.space.json")
+    doc = json.loads(path.read_text())
+    key = next(iter(doc["evaluations"]))
+    doc["evaluations"][key]["config"] = {"x": 3, "y": 2}   # tampered
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="does not match"):
+        SpaceDataset.load(path)
+
+
+def test_future_version_refused_loudly():
+    doc = quadratic_dataset().to_doc()
+    doc["version"] = DATASET_VERSION + 1
+    with pytest.raises(DatasetVersionError, match="NOT read"):
+        SpaceDataset.from_doc(doc)
+    # and migration refuses the same way (no silent downgrade)
+    with pytest.raises(DatasetVersionError):
+        migrate_dataset_doc(doc)
+
+
+def test_migrate_normalizes_versionless_doc():
+    doc = quadratic_dataset().to_doc()
+    del doc["version"]
+    out = migrate_dataset_doc(doc)
+    assert out["version"] == DATASET_VERSION
+    assert "version" not in doc                     # input not mutated
+    assert len(SpaceDataset.from_doc(out).evaluations) == 12
+
+
+def test_wrong_format_refused():
+    with pytest.raises(ValueError, match="tuning-space"):
+        SpaceDataset.from_doc({"format": "wisdom", "kernel": "k"})
+
+
+def test_dataset_store_roundtrip(tmp_path):
+    store = DatasetStore(tmp_path / "ds")
+    ds = quadratic_dataset()
+    path = store.save(ds)
+    assert path.name == "quad--tpu-v5e--8x8--float32.space.json"
+    again = store.load_for("quad", "tpu-v5e", (8, 8), "float32")
+    assert again is not None and len(again) == 12
+    assert store.load_for("quad", "tpu-v4", (8, 8), "float32") is None
+    assert store.datasets() == [path]
+
+
+# ------------------------------ recording --------------------------------
+
+
+def test_evaluator_records_every_evaluation_including_infeasible():
+    b = get_kernel("advec_u")
+    ds = SpaceDataset(b.name, b.space, (64, 64, 128), "float32", "tpu-v5e")
+    ev = CostModelEvaluator(b, (64, 64, 128), "float32", "tpu-v5e",
+                            verify="none", record_to=ds)
+    res = tune_random(b.space, ev, max_evals=50,
+                      rng=np.random.default_rng(0))
+    assert len(ds) == len(res.evaluations)
+    statuses = {e.status for e in ds.evaluations.values()}
+    assert "ok" in statuses
+    assert "infeasible" in statuses     # 64^3 advec_u has vmem blowups
+    # recorded scores match the session's
+    for e in res.evaluations:
+        got = ds.lookup(e.config)
+        assert got is not None
+        if e.feasible:
+            assert got.score_us == e.score_us
+
+
+def test_record_space_is_deterministic():
+    b = get_kernel("matmul")
+    d1 = record_space(b, (128, 128, 128), "float32", "tpu-v5e")
+    d2 = record_space(b, (128, 128, 128), "float32", "tpu-v5e")
+    assert d1.to_doc() == d2.to_doc()
+    assert len(d1) == b.space.valid_cardinality()
+
+
+def test_tune_kernel_record_dataset_merges(tmp_path):
+    b = get_kernel("matmul")
+    res = tune_kernel(b, (128, 128, 128), "float32", "tpu-v5e",
+                      strategy="random", max_evals=20, time_budget_s=None,
+                      write_wisdom=False, seed=0,
+                      record_dataset=tmp_path / "ds")
+    store = DatasetStore(tmp_path / "ds")
+    ds = store.load_for("matmul", "tpu-v5e", (128, 128, 128), "float32")
+    assert ds is not None and len(ds) == len(res.evaluations)
+    # a second session with a different seed merges into the same file
+    tune_kernel(b, (128, 128, 128), "float32", "tpu-v5e",
+                strategy="random", max_evals=20, time_budget_s=None,
+                write_wisdom=False, seed=1,
+                record_dataset=tmp_path / "ds")
+    merged = store.load_for("matmul", "tpu-v5e", (128, 128, 128), "float32")
+    assert len(merged) >= len(ds)
+
+
+# ------------------------------ simulation -------------------------------
+
+
+def test_simulated_runner_replays_and_counts():
+    ds = quadratic_dataset()
+    sim = SimulatedRunner(ds)
+    assert sim({"x": 2, "y": 1}).score_us == 1.0
+    missing = sim({"x": 99, "y": 99})
+    assert not missing.feasible and "not in dataset" in missing.error
+    assert (sim.calls, sim.hits, sim.misses) == (2, 1, 1)
+
+
+def test_simulated_runner_on_miss_error():
+    sim = SimulatedRunner(quadratic_dataset(), on_miss="error")
+    with pytest.raises(DatasetMiss):
+        sim({"x": 99, "y": 99})
+    with pytest.raises(ValueError):
+        SimulatedRunner(quadratic_dataset(), on_miss="what")
+
+
+@pytest.mark.parametrize("strategy", ["random", "bayes", "anneal",
+                                      "exhaustive"])
+def test_simulated_sessions_are_deterministic(strategy):
+    ds = quadratic_dataset()
+    a = run_on_dataset(ds, strategy, budget=10, seed=3)
+    b = run_on_dataset(ds, strategy, budget=10, seed=3)
+    assert [e.config for e in a.evaluations] \
+        == [e.config for e in b.evaluations]
+    assert a.best_config == b.best_config
+
+
+# ------------------------------- harness ---------------------------------
+
+
+def test_fraction_curve_monotone_and_padded():
+    ds = quadratic_dataset()
+    res = run_on_dataset(ds, "random", budget=20, seed=0)
+    curve = fraction_curve(ds, res, 20)
+    assert len(curve) == 20                    # padded past exhaustion
+    assert curve == sorted(curve)              # monotone nondecreasing
+    assert curve[-1] == 1.0                    # 12-config space: optimum hit
+
+
+def test_compare_report_deterministic_and_gated():
+    ds = quadratic_dataset()
+    r1 = compare([ds], budget=12, seeds=(0, 1))
+    r2 = compare([ds], budget=12, seeds=(0, 1))
+    assert dump_report(r1) == dump_report(r2)
+    assert r1["pass"]
+    # an unreachable threshold flips the dataset and the report to fail
+    r3 = compare([ds], budget=12, seeds=(0, 1),
+                 thresholds={"random": 1.1})
+    assert not r3["pass"]
+    by_name = {s["strategy"]: s for s in r3["datasets"][0]["strategies"]}
+    assert not by_name["random"]["pass"]
+    assert by_name["exhaustive"]["pass"]
+
+
+def test_compare_carries_no_timestamps():
+    report = compare([quadratic_dataset()], budget=6, seeds=(0,))
+    text = dump_report(report)
+    assert "date" not in text and "wall" not in text
+
+
+# ---------------------------- cost-model fit -----------------------------
+
+
+def test_fit_from_dataset_beats_constant_predictor():
+    b = get_kernel("matmul")
+    ds = record_space(b, (128, 128, 128), "float32", "tpu-v5e")
+    model = fit_from_dataset(ds)
+    assert model.n_samples == len(ds.feasible())
+    assert model.rmse_log < model.baseline_rmse_log
+    # rank agreement: the model orders a config pair the way the data does
+    feas = ds.feasible()
+    lo = min(feas, key=lambda e: e.score_us)
+    hi = max(feas, key=lambda e: e.score_us)
+    assert model.predict(lo.config) < model.predict(hi.config)
+
+
+def test_fit_needs_enough_samples():
+    s = small_space()
+    ds = SpaceDataset("k", s, (8, 8), "float32", "tpu-v5e")
+    ds.add({"x": 0, "y": 0}, 1.0, "ok")
+    with pytest.raises(ValueError, match="at least 3"):
+        fit_from_dataset(ds)
+
+
+# --------------------------- fleet warm start ----------------------------
+
+
+def _matmul_job() -> TuningJob:
+    return TuningJob(job_id="j-test-r0", kernel="matmul",
+                     device_kind="tpu-v5e", problem=(128, 128, 128),
+                     dtype="float32", strategy="exhaustive", n_shards=2,
+                     max_evals_per_shard=10_000)
+
+
+def test_worker_warm_starts_from_dataset(tmp_path):
+    store = DatasetStore(tmp_path)
+    store.save(record_space(get_kernel("matmul"), (128, 128, 128),
+                            "float32", "tpu-v5e"))
+    job = _matmul_job()
+
+    def run(datasets):
+        bus = ControlBus(MemoryTransport())
+        bus.publish("job", job.job_id, job.to_json())
+        worker = FleetWorker(bus, "w0", clock=ManualClock(),
+                             datasets=datasets)
+        worker.drain()
+        results = [bus.fetch("result", lease_name(job.job_id, s))
+                   for s in job.shard_ids()]
+        assert all(r is not None for r in results)
+        return worker, results
+
+    cold_worker, cold = run(None)
+    warm_worker, warm = run(store)
+    # the dataset covers the whole space: nothing is measured live
+    assert cold_worker.evals_run > 0
+    assert warm_worker.evals_run == 0
+    # ... and the published shard results are identical anyway
+    for c, w in zip(cold, warm):
+        assert c["best_config"] == w["best_config"]
+        assert c["best_score_us"] == w["best_score_us"]
+
+
+def test_history_from_dataset_filters_to_shard():
+    ds = quadratic_dataset()
+    full = history_from_dataset(ds)
+    assert len(full) == 12
+    shard0 = ds.space().shard(0, 3)
+    shard_hist = history_from_dataset(ds, shard0)
+    assert 0 < len(shard_hist) < 12
+    assert all(shard0.is_valid(e.config) for e in shard_hist)
+    # shards partition the history exactly
+    total = sum(len(history_from_dataset(ds, ds.space().shard(i, 3)))
+                for i in range(3))
+    assert total == 12
+
+
+# --------------------------------- CLI -----------------------------------
+
+
+def test_cli_record_run_compare_report(tmp_path, capsys):
+    from repro.tunebench.cli import main
+
+    out_dir = tmp_path / "datasets"
+    assert main(["record", "--kernel", "matmul",
+                 "--problem", "128,128,128", "--dtype", "float32",
+                 "--device", "tpu-v5e", "--out", str(out_dir)]) == 0
+    files = list(out_dir.glob("*.space.json"))
+    assert len(files) == 1
+
+    capsys.readouterr()                       # drain the record output
+    assert main(["run", "--dataset", str(files[0]), "--strategy", "bayes",
+                 "--budget", "16", "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["evals"] == 16
+    assert payload["best_score_us"] is not None
+
+    report_path = tmp_path / "report.json"
+    assert main(["compare", "--datasets", str(out_dir / "*.space.json"),
+                 "--budget", "16", "--seeds", "0,1",
+                 "--out", str(report_path), "--check"]) == 0
+    report = json.loads(report_path.read_text())
+    assert report["pass"] and report["budget"] == 16
+
+    assert main(["report", str(report_path), "--check"]) == 0
+    # byte-identical re-run (the acceptance criterion, via the CLI path)
+    report2_path = tmp_path / "report2.json"
+    assert main(["compare", "--datasets", str(out_dir / "*.space.json"),
+                 "--budget", "16", "--seeds", "0,1",
+                 "--out", str(report2_path)]) == 0
+    assert report_path.read_bytes() == report2_path.read_bytes()
+
+
+def test_cli_compare_check_fails_below_threshold(tmp_path):
+    from repro.tunebench.cli import main
+    ds = quadratic_dataset()
+    # a dataset with no feasible optimum reachable -> fraction 0
+    empty = SpaceDataset("empty", small_space(), (8, 8), "float32",
+                         "tpu-v5e")
+    for cfg in small_space().enumerate():
+        empty.add(cfg, float("inf"), "infeasible", error="nope")
+    p1 = ds.save(tmp_path / "quad.space.json")
+    p2 = empty.save(tmp_path / "empty.space.json")
+    assert main(["compare", "--datasets", str(p1), "--budget", "12",
+                 "--seeds", "0", "--check"]) == 0
+    assert main(["compare", "--datasets", str(p2), "--budget", "12",
+                 "--seeds", "0", "--check"]) == 1
+
+
+def test_benchmark_entry_reproduces_cli_curves():
+    """ISSUE 4 acceptance: the strategy_bench benchmark and the CLI
+    compare produce the same curves on the shipped recorded spaces."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    try:
+        from benchmarks.strategy_bench import shipped_datasets
+    finally:
+        sys.path.pop(0)
+    datasets = shipped_datasets()
+    assert {d.kernel for d in datasets} == {"matmul", "advec_u"}
+    report = compare(datasets)
+    assert report["pass"], "shipped spaces must clear their thresholds"
+    # same inputs through the harness twice -> byte-identical (what the
+    # CI job's compare --out artifact relies on)
+    assert dump_report(report) == dump_report(compare(datasets))
+
+
+def test_record_dataset_refuses_cross_scenario_merge(tmp_path):
+    """Review fix: merging a session into a dataset recorded for a
+    different scenario/objective must refuse, not silently mix scores."""
+    path = tmp_path / "one.space.json"
+    b = get_kernel("matmul")
+    tune_kernel(b, (128, 128, 128), "float32", "tpu-v5e",
+                strategy="random", max_evals=5, time_budget_s=None,
+                write_wisdom=False, record_dataset=path)
+    with pytest.raises(ValueError, match="cannot merge"):
+        tune_kernel(b, (256, 256, 256), "float32", "tpu-v5e",
+                    strategy="random", max_evals=5, time_budget_s=None,
+                    write_wisdom=False, record_dataset=path)
+
+
+def test_compare_runs_exhaustive_once_per_dataset():
+    """Review fix: exhaustive ignores the seed, so compare() samples it
+    once instead of replicating a constant across the seed list."""
+    report = compare([quadratic_dataset()], budget=6, seeds=(0, 1, 2))
+    by_name = {s["strategy"]: s
+               for s in report["datasets"][0]["strategies"]}
+    assert len(by_name["exhaustive"]["per_seed_final"]) == 1
+    assert len(by_name["random"]["per_seed_final"]) == 3

@@ -188,3 +188,73 @@ def test_selection_never_fails_never_invents(data):
     assert cfg in stored + [{"i": -1}]
     if n == 0:
         assert tier == "default"
+
+
+# -------------- mixed-device-family fallback ordering (ISSUE 4) --------------
+
+
+def _mixed_family_wisdom():
+    """Records spread over two families and three device kinds, with
+    dtype/distance decoys, so every inter-tier preference is observable."""
+    w = Wisdom("k")
+    # family tpu-v5: a sibling device (not the query device), wrong dtype
+    w.add(rec(device="tpu-v5p", family="tpu-v5", problem=(256, 256),
+              dtype="bfloat16", config={"c": "v5-sibling-bf16"}))
+    # family tpu-v4: exact dtype, exact problem — but the wrong family
+    w.add(rec(device="tpu-v4", family="tpu-v4", problem=(256, 256),
+              dtype="float32", config={"c": "v4-f32"}))
+    return w
+
+
+def test_family_beats_other_family_even_with_wrong_dtype():
+    """Tier "family" (right family, wrong dtype) outranks "any+dtype"
+    (wrong family, right dtype): architecture similarity dominates
+    precision similarity in the §4.5 chain."""
+    cfg, tier = _mixed_family_wisdom().select("tpu-v5e", (256, 256),
+                                              "float32", DEFAULT)
+    assert (tier, cfg["c"]) == ("family", "v5-sibling-bf16")
+
+
+def test_family_dtype_beats_family_distance():
+    """Within the family tiers, dtype match outranks problem-size
+    proximity: a far family record with the right dtype wins over a
+    byte-exact-size family record with the wrong dtype."""
+    w = _mixed_family_wisdom()
+    w.add(rec(device="tpu-v5p", family="tpu-v5", problem=(1024, 1024),
+              dtype="float32", config={"c": "v5-sibling-far-f32"}))
+    cfg, tier = w.select("tpu-v5e", (256, 256), "float32", DEFAULT)
+    assert (tier, cfg["c"]) == ("family+dtype", "v5-sibling-far-f32")
+
+
+def test_unknown_device_kind_joins_its_prefix_family():
+    """A device kind nobody tuned (e.g. a new v5 variant) derives its
+    family from the first two kind segments ("tpu-v5-lite" -> "tpu-v5")
+    and still lands on family wisdom instead of falling through to
+    "any"."""
+    cfg, tier = _mixed_family_wisdom().select("tpu-v5-lite", (256, 256),
+                                              "bfloat16", DEFAULT)
+    assert (tier, cfg["c"]) == ("family+dtype", "v5-sibling-bf16")
+
+
+def test_device_tier_beats_family_tier_regardless_of_distance():
+    """A far record on the exact device outranks an exact-size record on
+    a family sibling: tiers are strict, distance only breaks ties inside
+    one tier."""
+    w = _mixed_family_wisdom()
+    w.add(rec(device="tpu-v5e", family="tpu-v5", problem=(4096, 4096),
+              dtype="bfloat16", config={"c": "v5e-far-bf16"}))
+    cfg, tier = w.select("tpu-v5e", (256, 256), "float32", DEFAULT)
+    assert (tier, cfg["c"]) == ("device", "v5e-far-bf16")
+
+
+def test_mixed_families_last_resort_any():
+    """With no family cousin at all, the wrong-family record is still
+    used (tier "any+dtype"/"any") — wisdom never invents configs, and
+    never returns the default while *any* record exists."""
+    w = Wisdom("k")
+    w.add(rec(device="tpu-v4", family="tpu-v4", problem=(256, 256),
+              dtype="bfloat16", config={"c": "v4-bf16"}))
+    cfg, tier = w.select("gpu-h100", (256, 256), "float32", DEFAULT)
+    assert (tier, cfg["c"]) == ("any", "v4-bf16")
+    cfg, tier = w.select("gpu-h100", (256, 256), "bfloat16", DEFAULT)
+    assert (tier, cfg["c"]) == ("any+dtype", "v4-bf16")

@@ -1,9 +1,18 @@
 #!/usr/bin/env python
-"""Fail on broken intra-repo links in README.md and docs/*.md.
+"""Fail on broken intra-repo links and on orphaned docs pages.
 
-Checks every markdown link whose target is a repo-relative path (http(s)
-and mailto links are skipped; #anchors are stripped) and exits non-zero
-listing each target that does not exist. Run from anywhere:
+Two checks over README.md and docs/*.md:
+
+1. **Broken links** — every markdown link whose target is a repo-relative
+   path must exist (http(s) and mailto links are skipped; #anchors are
+   stripped).
+2. **Reachability** — every page under docs/ must be reachable by
+   following intra-repo markdown links from README.md or
+   docs/architecture.md (the two entry points readers actually start
+   from). A docs page nobody links to is dead documentation: it silently
+   rots because no reader path leads to it.
+
+Run from anywhere:
 
     python tools/check_docs_links.py
 """
@@ -17,6 +26,9 @@ from pathlib import Path
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
 
+#: Reachability roots: the places a reader enters the docs tree.
+ENTRY_POINTS = ("README.md", "docs/architecture.md")
+
 
 def doc_files(root: Path) -> list[Path]:
     files = [root / "README.md"]
@@ -24,31 +36,60 @@ def doc_files(root: Path) -> list[Path]:
     return [f for f in files if f.exists()]
 
 
-def check(root: Path) -> list[str]:
+def md_targets(md: Path) -> list[tuple[int, str, Path]]:
+    """(line, raw target, resolved path) for each repo-relative link."""
+    out = []
+    for n, line in enumerate(md.read_text().splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            out.append((n, target, (md.parent / path).resolve()))
+    return out
+
+
+def check_links(root: Path) -> list[str]:
     errors = []
     for md in doc_files(root):
-        for n, line in enumerate(md.read_text().splitlines(), 1):
-            for target in LINK_RE.findall(line):
-                if target.startswith(SKIP_PREFIXES):
-                    continue
-                path = target.split("#", 1)[0]
-                if not path:
-                    continue
-                resolved = (md.parent / path).resolve()
-                if not resolved.exists():
-                    errors.append(f"{md.relative_to(root)}:{n}: "
-                                  f"broken link -> {target}")
+        for n, target, resolved in md_targets(md):
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(root)}:{n}: "
+                              f"broken link -> {target}")
+    return errors
+
+
+def check_reachability(root: Path) -> list[str]:
+    """Docs pages not linked (transitively) from any entry point."""
+    queue = [(root / p).resolve() for p in ENTRY_POINTS
+             if (root / p).exists()]
+    seen: set[Path] = set(queue)
+    while queue:
+        md = queue.pop()
+        for _, _, resolved in md_targets(md):
+            if (resolved.suffix == ".md" and resolved.exists()
+                    and resolved not in seen):
+                seen.add(resolved)
+                queue.append(resolved)
+    errors = []
+    for md in doc_files(root):
+        if md.resolve() not in seen:
+            errors.append(
+                f"{md.relative_to(root)}: not reachable from "
+                f"{' or '.join(ENTRY_POINTS)} — link it from the "
+                f"architecture page or the README")
     return errors
 
 
 def main() -> int:
     root = Path(__file__).resolve().parent.parent
-    errors = check(root)
+    errors = check_links(root) + check_reachability(root)
     for e in errors:
         print(e)
     n_files = len(doc_files(root))
     print(f"checked {n_files} file(s): "
-          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+          f"{'OK' if not errors else f'{len(errors)} problem(s)'}")
     return 1 if errors else 0
 
 
