@@ -13,6 +13,9 @@
   (ours)   -> strategy_bench     (fraction-of-optimum per strategy on the
                                   shipped recorded spaces; deterministic,
                                   threshold-gated)
+  (ours)   -> transfer_portability (held-out-device transfer: fraction of
+                                  the hidden target optimum reached by
+                                  transferred wisdom vs cold fallback)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 """
@@ -25,7 +28,7 @@ import time
 
 MODULES = ("capture_bench", "distribution", "tuning_session",
            "portability", "ppm", "overhead", "online_convergence",
-           "fleet_tuning", "strategy_bench")
+           "fleet_tuning", "strategy_bench", "transfer_portability")
 
 
 def main() -> None:

@@ -72,6 +72,25 @@ def get_device(kind: str) -> DeviceSpec:
                       program_overhead=TPU_V5E.program_overhead)
 
 
+#: Capability-vector axes, in order (see :func:`capability_vector`).
+CAPABILITY_AXES = ("flops_bf16", "flops_f32", "hbm_bw", "vmem_bytes",
+                   "program_overhead")
+
+
+def capability_vector(spec: DeviceSpec) -> tuple[float, ...]:
+    """The numeric capabilities that govern cross-device transfer, as a
+    plain tuple in ``CAPABILITY_AXES`` order.
+
+    These are the axes along which a tuned configuration's performance
+    moves when the hardware changes: compute throughput (both precisions),
+    memory bandwidth, on-chip memory capacity (feasibility!), and
+    per-program launch overhead. ``repro.transfer.DeviceModel`` works on
+    ratios of these vectors, so the absolute units never matter.
+    """
+    return (spec.flops_bf16, spec.flops_f32, spec.hbm_bw,
+            float(spec.vmem_bytes), spec.program_overhead)
+
+
 def current_device_kind() -> str:
     """Active device kind: env override, else the real JAX device."""
     env = os.environ.get(DEVICE_ENV)

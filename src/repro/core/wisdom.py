@@ -11,13 +11,20 @@ it superseded, locally or during a fleet merge (``repro.distrib``). See
 ``docs/wisdom-format.md`` for the field-by-field schema.
 
 Selection heuristic — the paper's §4.5 list, extended with dtype as a
-scenario component (our precision analogue of the paper's float/double):
+scenario component (our precision analogue of the paper's float/double)
+and with a *transfer* tier for cross-device predictions
+(``repro.transfer``):
 
-  1. record matching device kind AND problem size (preferring same dtype);
-  2. else, same device kind, problem size closest in Euclidean distance;
-  3. else, same device *family*, closest problem size;
-  4. else, any record, closest problem size;
-  5. else (empty/missing wisdom), the default configuration.
+  1. measured record matching device kind AND problem size (preferring
+     same dtype);
+  2. else, a *transferred* record for this device kind and dtype whose
+     confidence clears ``TRANSFER_MIN_CONFIDENCE`` (closest problem
+     size) — predictions outrank scenario-distance fallback but never
+     shadow a measurement;
+  3. else, same device kind, problem size closest in Euclidean distance;
+  4. else, same device *family*, closest problem size;
+  5. else, any measured record, closest problem size;
+  6. else (empty/missing wisdom), the default configuration.
 """
 
 from __future__ import annotations
@@ -45,6 +52,12 @@ WISDOM_DIR_ENV = "KERNEL_LAUNCHER_WISDOM_DIR"
 
 #: Lineage entries kept per record after a merge (oldest dropped first).
 LINEAGE_MAX = 16
+
+#: Minimum transfer confidence a predicted record needs before ``select``
+#: will serve it. Calibrated against the shipped tpu-v5e -> tpu-v4 pair
+#: (well above threshold) and tpu -> cpu (far below): see
+#: ``repro.transfer.confidence`` and docs/transfer-tuning.md.
+TRANSFER_MIN_CONFIDENCE = 0.30
 
 
 class WisdomVersionError(ValueError):
@@ -111,6 +124,32 @@ def make_fleet_provenance(strategy: str, evals: int, objective: str,
         "objective": objective,
         "job": job_id,
         "shards": int(n_shards),
+        "round": int(round_),
+        "jax_version": jax.__version__,
+    }
+
+
+def make_transfer_provenance(source_device: str, source_entries: int,
+                             confidence: float, predicted_us: float,
+                             predictor: str = "ridge+capability",
+                             round_: int = 0) -> dict:
+    """Provenance for a cross-device *transferred* record (repro.transfer).
+
+    Deterministic like fleet provenance — no timestamp, host, or user: a
+    transferred record is a pure function of (source dataset, capability
+    model, predictor), so any host transferring the same recorded space
+    to the same target produces a byte-identical record. ``confidence``
+    is the gate ``Wisdom.select`` applies before serving the prediction;
+    ``predicted_us`` is what the fleet verification loop compares
+    observed serve latency against.
+    """
+    return {
+        "source": "transfer",
+        "source_device": source_device,
+        "source_entries": int(source_entries),
+        "confidence": round(float(confidence), 6),
+        "predicted_us": round(float(predicted_us), 6),
+        "predictor": predictor,
         "round": int(round_),
         "jax_version": jax.__version__,
     }
@@ -183,6 +222,22 @@ class WisdomRecord:
             return int(self.provenance.get("evaluations", 0))
         except (TypeError, ValueError):
             return 0
+
+    def is_transferred(self) -> bool:
+        """True for records *predicted* by the cross-device transfer layer
+        rather than measured. Transferred records live in their own
+        selection tier (below exact, above scenario-distance fallback)
+        and always lose to a measured record for the same scenario."""
+        return self.provenance.get("source") == "transfer"
+
+    def transfer_confidence(self) -> float:
+        """The transfer predictor's confidence in [0, 1] (0.0 for
+        measured records and malformed provenance): the quantity
+        ``select`` gates on before serving a transferred record."""
+        try:
+            return float(self.provenance.get("confidence", 0.0))
+        except (TypeError, ValueError):
+            return 0.0
 
     def record_id(self) -> str:
         """Stable content identity of this tuning result.
@@ -328,8 +383,20 @@ class Wisdom:
                             r.lineage = merge_lineage(
                                 extra=[*r.lineage, *record.lineage])
                         return
+                    # Measured beats transferred regardless of score (a
+                    # prediction must never displace a real measurement
+                    # — that is what verification jobs are for, see
+                    # repro.transfer); equal scores fall through to
+                    # record_id so the survivor is insertion-order
+                    # independent, like select() and better_record.
                     winner, loser = ((record, r)
-                                     if record.score_us < r.score_us
+                                     if ((record.is_transferred(),
+                                          record.score_us,
+                                          -record.evaluations(),
+                                          record.record_id())
+                                         < (r.is_transferred(), r.score_us,
+                                            -r.evaluations(),
+                                            r.record_id()))
                                      else (r, record))
                     winner.lineage = merge_lineage(winner, loser)
                     self.records[i] = winner
@@ -339,35 +406,65 @@ class Wisdom:
     # -- selection (paper §4.5) ----------------------------------------------
 
     def select(self, device_kind: str, problem_size: Sequence[int],
-               dtype: str, default_config: dict) -> tuple[dict, str]:
-        """Pick a config for a scenario. Returns (config, match_tier)."""
+               dtype: str, default_config: dict,
+               min_transfer_confidence: float | None = None
+               ) -> tuple[dict, str]:
+        """Pick a config for a scenario. Returns (config, match_tier).
+
+        Measured records go through the paper's §4.5 fuzzy tiers.
+        *Transferred* records (cross-device predictions, see
+        ``repro.transfer``) participate only in their own ``"transfer"``
+        tier — same device kind and dtype, confidence at least
+        ``min_transfer_confidence`` (default
+        :data:`TRANSFER_MIN_CONFIDENCE`) — which sits directly below
+        ``"exact"``: a confident prediction for this device beats *every*
+        scenario-distance fallback, including a same-device measurement
+        for a different problem size (both extrapolate; the prediction
+        was at least calibrated for this hardware and ranks by problem
+        distance within its tier), but it never shadows a real
+        measurement for the exact scenario.
+        """
         problem = tuple(int(x) for x in problem_size)
         family = get_device(device_kind).family
+        threshold = (TRANSFER_MIN_CONFIDENCE
+                     if min_transfer_confidence is None
+                     else float(min_transfer_confidence))
+        measured = [r for r in self.records if not r.is_transferred()]
+        transferred = [r for r in self.records
+                       if r.is_transferred()
+                       and r.device_kind == device_kind
+                       and r.dtype == dtype
+                       and r.transfer_confidence() >= threshold]
 
         def best(cands: list[WisdomRecord]) -> WisdomRecord | None:
             if not cands:
                 return None
-            return min(cands, key=lambda r: (_distance(r.problem_size, problem),
-                                             r.score_us))
+            # record_id as the last key: equal-distance equal-score
+            # candidates must resolve the same way on every host, not by
+            # whatever order records happened to be inserted or merged.
+            return min(cands, key=lambda r: (_distance(r.problem_size,
+                                                       problem),
+                                             r.score_us, r.record_id()))
 
         tiers: list[tuple[str, list[WisdomRecord]]] = []
-        exact = [r for r in self.records
+        exact = [r for r in measured
                  if r.device_kind == device_kind
                  and r.problem_size == problem and r.dtype == dtype]
         tiers.append(("exact", exact))
-        same_dev = [r for r in self.records
+        tiers.append(("transfer", transferred))
+        same_dev = [r for r in measured
                     if r.device_kind == device_kind and r.dtype == dtype]
         tiers.append(("device+dtype", same_dev))
-        same_dev_any = [r for r in self.records if r.device_kind == device_kind]
+        same_dev_any = [r for r in measured if r.device_kind == device_kind]
         tiers.append(("device", same_dev_any))
-        fam = [r for r in self.records
+        fam = [r for r in measured
                if r.device_family == family and r.dtype == dtype]
         tiers.append(("family+dtype", fam))
-        fam_any = [r for r in self.records if r.device_family == family]
+        fam_any = [r for r in measured if r.device_family == family]
         tiers.append(("family", fam_any))
-        any_dtype = [r for r in self.records if r.dtype == dtype]
+        any_dtype = [r for r in measured if r.dtype == dtype]
         tiers.append(("any+dtype", any_dtype))
-        tiers.append(("any", list(self.records)))
+        tiers.append(("any", measured))
 
         for tier_name, cands in tiers:
             rec = best(cands)

@@ -49,6 +49,10 @@ def _cmd_inspect(args) -> int:
             line = (f"  {rec.device_kind} {_fmt_problem(rec.problem_size)} "
                     f"{rec.dtype}: {rec.score_us:.2f}us "
                     f"config={rec.config}")
+            if rec.is_transferred():
+                line += (f" [transfer from "
+                         f"{prov.get('source_device', '?')}, "
+                         f"confidence {rec.transfer_confidence():.2f}]")
             if args.verbose:
                 line += (f" strategy={prov.get('strategy', '?')}"
                          f" evals={rec.evaluations()}"

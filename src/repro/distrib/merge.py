@@ -47,9 +47,15 @@ def better_record(a: WisdomRecord, b: WisdomRecord) -> WisdomRecord:
     """The statistical winner of two same-scenario records (deterministic
     under argument swap). Also the rule the fleet coordinator applies to
     same-scenario shard winners, so assembly and merge can never disagree
-    about which result survives."""
-    ka = (a.score_us, -a.evaluations(), a.record_id())
-    kb = (b.score_us, -b.evaluations(), b.record_id())
+    about which result survives.
+
+    A *measured* record always beats a *transferred* one (predictions
+    carry a score, but a prediction displacing a measurement would defeat
+    the verification loop — see ``repro.transfer``); two transferred
+    records compete on the usual score/evaluations/id key.
+    """
+    ka = (a.is_transferred(), a.score_us, -a.evaluations(), a.record_id())
+    kb = (b.is_transferred(), b.score_us, -b.evaluations(), b.record_id())
     return a if ka <= kb else b
 
 

@@ -175,15 +175,24 @@ class PullSync:
         self.kernels = list(kernels or [])
         self.interval = interval
         self.pulls = 0
+        self.failures = 0
+        self.last_error: Exception | None = None
         self._ticks = 0
 
     def attach(self, kernel) -> None:
         self.kernels.append(kernel)
 
     def pull(self) -> MergeReport:
-        """Fetch every fleet kernel and merge into the local store."""
+        """Fetch every fleet kernel and merge into the local store.
+
+        Two-phase: every transport fetch and in-memory merge completes
+        *before* the first local write. A transport that dies mid-pull
+        (shared mount hiccup, truncated document) therefore raises with
+        the local store byte-identical to its pre-pull state — serving
+        hosts never select from a half-synced store.
+        """
         report = MergeReport()
-        changed: set[str] = set()
+        staged: list[Wisdom] = []
         for name in self.transport.list_kernels():
             if name.startswith(CONTROL_PREFIX):
                 continue        # fleet control documents are not wisdom
@@ -194,8 +203,11 @@ class PullSync:
             # Full-document comparison: even a lineage-only difference
             # (same winners, pooled provenance history) must be persisted.
             if json.dumps(merged.to_doc(), sort_keys=True) != before:
-                self.store.save(merged)
-                changed.add(name)
+                staged.append(merged)
+        changed: set[str] = set()
+        for merged in staged:       # all fetches succeeded: now persist
+            self.store.save(merged)
+            changed.add(merged.kernel_name)
         self.pulls += 1
         for k in self.kernels:
             if k.builder.name in changed:
@@ -204,7 +216,22 @@ class PullSync:
 
     def tick(self) -> MergeReport | None:
         """Serving-loop hook: pulls on every ``interval``-th call (first
-        call included, so a fresh engine starts from fleet wisdom)."""
+        call included, so a fresh engine starts from fleet wisdom).
+
+        Failure-isolated: a raising transport must not kill the decode
+        step that sponsored the tick, so errors are swallowed here —
+        counted in ``failures``, the exception kept in ``last_error`` —
+        and the previously served wisdom stays in effect until the next
+        due tick retries. Callers who need the error should call
+        :meth:`pull` directly.
+        """
         due = self._ticks % self.interval == 0
         self._ticks += 1
-        return self.pull() if due else None
+        if not due:
+            return None
+        try:
+            return self.pull()
+        except Exception as e:  # noqa: BLE001 — serving must outlive sync
+            self.failures += 1
+            self.last_error = e
+            return None

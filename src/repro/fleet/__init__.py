@@ -9,7 +9,8 @@ interruption*:
 * :mod:`.bus`         — control channels (demand/job/lease/state/result)
   over the existing wisdom sync transports, plus injectable clocks;
 * :mod:`.demand`      — aggregate worker ``ScenarioTracker`` snapshots,
-  rank scenarios by miss-count x cost-model predicted speedup;
+  rank scenarios by miss-count x cost-model predicted speedup; aggregate
+  serving hosts' observed latencies (the transfer verification signal);
 * :mod:`.jobs`        — :class:`TuningJob` specs, deterministic config-
   space shards, crash-safe lease claim/heartbeat/expiry;
 * :mod:`.worker`      — :class:`FleetWorker`: claim a shard, tune it with
@@ -24,10 +25,11 @@ interruption*:
 """
 
 from .bus import CHANNELS, Clock, ControlBus, ManualClock, WallClock
-from .coordinator import MIN_MISSES, Coordinator, CoordinatorReport
+from .coordinator import (MIN_MISSES, TRANSFER_VERIFY_TOLERANCE, Coordinator,
+                          CoordinatorReport)
 from .demand import (DemandEntry, ScenarioPriority, aggregate_demand,
-                     predicted_speedup, prioritize, publish_demand,
-                     seed_demand)
+                     aggregate_latency, predicted_speedup, prioritize,
+                     publish_demand, publish_latency, seed_demand)
 from .jobs import (LEASE_TTL_S, Lease, LeaseLost, TuningJob, claim_shard,
                    fetch_lease, heartbeat, job_id_for, lease_name,
                    list_jobs, release)
@@ -36,9 +38,11 @@ from .worker import FleetWorker, WorkerCrash
 
 __all__ = [
     "CHANNELS", "Clock", "ControlBus", "ManualClock", "WallClock",
-    "MIN_MISSES", "Coordinator", "CoordinatorReport",
+    "MIN_MISSES", "TRANSFER_VERIFY_TOLERANCE", "Coordinator",
+    "CoordinatorReport",
     "DemandEntry", "ScenarioPriority", "aggregate_demand",
-    "predicted_speedup", "prioritize", "publish_demand", "seed_demand",
+    "aggregate_latency", "predicted_speedup", "prioritize",
+    "publish_demand", "publish_latency", "seed_demand",
     "LEASE_TTL_S", "Lease", "LeaseLost", "TuningJob", "claim_shard",
     "fetch_lease", "heartbeat", "job_id_for", "lease_name", "list_jobs",
     "release",

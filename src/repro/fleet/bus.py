@@ -30,8 +30,10 @@ _NAME_RE = re.compile(r"^[A-Za-z0-9._-]+$")
 _SEP = "--"
 
 #: Channels the orchestrator uses (documentation; the bus accepts any
-#: filename-safe channel string).
-CHANNELS = ("demand", "job", "lease", "state", "result", "done")
+#: filename-safe channel string). ``latency`` carries serving hosts'
+#: observed per-scenario latencies — the signal the coordinator checks
+#: transferred records' predictions against (repro.transfer).
+CHANNELS = ("demand", "job", "lease", "state", "result", "done", "latency")
 
 
 def _check(kind: str, value: str) -> str:

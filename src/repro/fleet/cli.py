@@ -87,7 +87,8 @@ def _cmd_coordinate(args) -> int:
         report = coord.tick()
         print(f"round {i}: assembled={len(report.assembled)} "
               f"planned={len(report.planned)} "
-              f"requeued={len(report.requeued)}")
+              f"requeued={len(report.requeued)} "
+              f"verify={len(report.verify)}")
         if report.idle:
             break
     print(json.dumps(coord.status(), indent=2))

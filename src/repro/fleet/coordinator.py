@@ -29,17 +29,27 @@ from dataclasses import dataclass, field
 from repro.core.device import get_device
 from repro.core.wisdom import (Wisdom, WisdomRecord, make_fleet_provenance)
 from repro.distrib.merge import better_record, merge_wisdom
-from repro.distrib.store import WisdomStore
+from repro.distrib.store import CONTROL_PREFIX, WisdomStore
 from repro.distrib.sync import transport_wisdom
 from repro.online.tracker import format_key
 
 from .bus import ControlBus
-from .demand import aggregate_demand, prioritize
+from .demand import (aggregate_demand, aggregate_latency, prioritize,
+                     seed_demand)
 from .jobs import TuningJob, job_id_for, lease_name, list_jobs
 
 #: Misses below this never become a job (the fleet analogue of the online
 #: tracker's activation threshold).
 MIN_MISSES = 3
+
+#: Observed serve latency above predicted_us x this triggers a
+#: verification job for a transferred record. Above the cost model's
+#: ~5% measurement noise but tight enough that a genuinely wrong
+#: prediction (a config that does not suit the target device) trips it.
+TRANSFER_VERIFY_TOLERANCE = 1.2
+
+#: Synthetic demand-snapshot worker id used for verification enqueues.
+VERIFY_WORKER = "transfer-verify"
 
 
 @dataclass
@@ -60,6 +70,10 @@ class CoordinatorReport:
     assembled: list[str] = field(default_factory=list)  # job ids
     requeued: list[str] = field(default_factory=list)   # job ids (new round)
     skipped: int = 0                                    # below-threshold
+    #: Scenario keys whose transferred records regressed against their
+    #: prediction this round and were re-seeded into demand (the jobs
+    #: they become show up in ``planned``).
+    verify: list[str] = field(default_factory=list)
 
     @property
     def idle(self) -> bool:
@@ -230,13 +244,69 @@ class Coordinator:
                                          merged))
         return winner
 
+    # -- transfer verification -------------------------------------------------
+
+    def check_transfers(self, report: CoordinatorReport | None = None
+                        ) -> list[str]:
+        """Enqueue verification tuning for regressed transferred records.
+
+        Compares each transferred record on the transport (provenance
+        ``predicted_us``) against the fleet's best observed serve latency
+        for its scenario (``latency`` channel). An observation worse than
+        prediction x ``TRANSFER_VERIFY_TOLERANCE`` means the prediction
+        is not holding on real traffic: the scenario is re-seeded into
+        demand under the ``transfer-verify`` worker id, so the very next
+        ``plan()`` turns it into an ordinary tuning job — and the
+        assembled *measured* record beats the transferred one in every
+        merge, completing predict -> verify -> promote.
+
+        Example::
+
+            publish_latency(bus, "host-1", {"matmul": {key_str: 712.0}})
+            coordinator.tick()        # runs check_transfers + plan
+        """
+        report = report if report is not None else CoordinatorReport()
+        observed = aggregate_latency(self.bus)
+        if not observed:
+            return []
+        # Only kernels somebody actually observed: latency docs persist
+        # across ticks, and fetching + migrating every kernel's wisdom on
+        # every tick would make the daemon loop O(kernels x records) I/O.
+        watched = sorted({kernel for kernel, _key in observed})
+        published = set(self.bus.transport.list_kernels())
+        regressed: list[tuple[str, tuple, int]] = []
+        for name in watched:
+            if name.startswith(CONTROL_PREFIX) or name not in published:
+                continue
+            for rec in transport_wisdom(self.bus.transport, name).records:
+                if not rec.is_transferred():
+                    continue
+                key = (rec.device_kind, rec.problem_size, rec.dtype)
+                obs = observed.get((name, format_key(key)))
+                if obs is None:
+                    continue
+                try:
+                    predicted = float(rec.provenance.get("predicted_us",
+                                                         rec.score_us))
+                except (TypeError, ValueError):
+                    predicted = rec.score_us
+                if obs > predicted * TRANSFER_VERIFY_TOLERANCE:
+                    regressed.append((name, key, self.min_misses))
+        keys = [format_key(k) for _, k, _ in regressed]
+        if regressed:
+            seed_demand(self.bus, VERIFY_WORKER, regressed)
+            report.verify.extend(keys)
+        return keys
+
     # -- the loop --------------------------------------------------------------
 
     def tick(self) -> CoordinatorReport:
-        """One coordination round: assemble finished jobs, then re-check
-        demand (hot scenarios that regressed get re-enqueued)."""
+        """One coordination round: assemble finished jobs, check
+        transferred-wisdom predictions against observed latency, then
+        re-check demand (hot or regressed scenarios get (re-)enqueued)."""
         report = CoordinatorReport()
         self.assemble(report)
+        self.check_transfers(report)
         self.plan(report)
         return report
 

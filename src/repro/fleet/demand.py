@@ -126,6 +126,53 @@ def seed_demand(bus: ControlBus, worker_id: str,
     publish_demand(bus, worker_id, trackers)
 
 
+def publish_latency(bus: ControlBus, worker_id: str,
+                    observations: dict[str, dict[str, float]]) -> None:
+    """Publish one serving host's observed per-scenario latencies.
+
+    ``observations`` maps kernel name -> {canonical scenario key ->
+    best observed latency in us}. Replace-style like demand snapshots
+    (re-publishing is idempotent); the coordinator compares these against
+    the ``predicted_us`` of transferred wisdom records and enqueues
+    verification tuning for scenarios whose predictions regressed
+    (see ``Coordinator.check_transfers``).
+
+    Example::
+
+        publish_latency(bus, "host-1",
+                        {"matmul": {format_key(key): 512.3}})
+    """
+    bus.publish("latency", worker_id, {
+        "worker": worker_id,
+        "kernels": {k: {key: float(us) for key, us in sorted(v.items())}
+                    for k, v in sorted(observations.items())},
+    })
+
+
+def aggregate_latency(bus: ControlBus) -> dict[tuple[str, str], float]:
+    """Fleet-wide best observed latency per (kernel, scenario key).
+
+    The *minimum* over workers: latency observations verify a transferred
+    record's optimistic prediction, and the best-case observation is the
+    fairest comparison (stragglers and noisy hosts must not trigger
+    spurious verification jobs).
+
+    Example::
+
+        observed = aggregate_latency(bus)
+        us = observed.get(("matmul", format_key(key)))
+    """
+    table: dict[tuple[str, str], float] = {}
+    for doc in bus.docs("latency"):
+        for kernel, scenarios in doc.get("kernels", {}).items():
+            for key, us in scenarios.items():
+                k = (kernel, key)
+                us = float(us)
+                if k not in table or us < table[k]:
+                    table[k] = us
+    return table
+
+
 def aggregate_demand(bus: ControlBus) -> list[DemandEntry]:
     """Merge every worker's snapshot into one fleet-wide demand table.
 

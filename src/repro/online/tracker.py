@@ -52,9 +52,12 @@ def parse_key(s: str) -> ScenarioKey:
     return (device_kind, problem, dtype)
 
 #: Selection tiers that count as wisdom misses (paper §4.5 tiers 2-5: any
-#: fuzzy device/size/dtype match, and the empty-wisdom default).
+#: fuzzy device/size/dtype match, and the empty-wisdom default). The
+#: "transfer" tier counts too: a transferred record serves traffic well,
+#: but it is a *prediction* — demand must keep flowing so the fleet
+#: verification loop eventually replaces it with a measurement.
 MISS_TIERS = frozenset({
-    "device+dtype", "device", "family+dtype", "family",
+    "transfer", "device+dtype", "device", "family+dtype", "family",
     "any+dtype", "any", "default",
 })
 

@@ -1,0 +1,101 @@
+"""Device capability model: how performance moves between device families.
+
+Cross-vendor auto-tuning studies (Lurati et al., "Bringing Auto-tuning to
+HIP"; the paper's own A4000/A100 portability tables) show tuned configs
+transfer with a quality loss that tracks how *similar* the two devices
+are along a handful of capability axes: compute throughput, memory
+bandwidth, on-chip memory capacity, launch overhead. :class:`DeviceModel`
+reduces a (source, target) device pair to exactly those ratios
+(:func:`repro.core.device.capability_vector`), which the transfer
+predictor uses two ways:
+
+* **calibration** — scale a source-grounded score prediction to the
+  target's balance point (compute-bound work moves with the FLOP/s
+  ratio, streaming work with the bandwidth ratio);
+* **similarity** — a scalar in (0, 1] that decays with the norm of the
+  log capability ratios, feeding the confidence gate: predicting
+  tpu-v5e -> tpu-v4 is credible, predicting tpu -> cpu is not.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.device import (CAPABILITY_AXES, DeviceSpec,
+                               capability_vector, get_device)
+
+__all__ = ["DeviceModel"]
+
+
+@dataclass(frozen=True)
+class DeviceModel:
+    """Capability ratios between a tuned *source* device and an untuned
+    *target* device.
+
+    All quantities derive from the two specs' capability vectors; the
+    model is symmetric up to inversion and completely deterministic.
+
+    Example::
+
+        m = DeviceModel.between("tpu-v5e", "tpu-v4")
+        m.similarity()          # ~0.5: close TPU siblings
+        m.compute_ratio("bfloat16"), m.bandwidth_ratio()
+    """
+
+    source: DeviceSpec
+    target: DeviceSpec
+
+    @staticmethod
+    def between(source_kind: str, target_kind: str) -> "DeviceModel":
+        """Build a model from two device kind strings (table lookup or
+        prefix-derived spec for unknown real hardware)."""
+        return DeviceModel(get_device(source_kind), get_device(target_kind))
+
+    # -- ratios (target / source: >1 means the target is stronger) ------------
+
+    def ratios(self) -> dict[str, float]:
+        """Per-axis target/source capability ratios, keyed by
+        ``CAPABILITY_AXES``."""
+        src = capability_vector(self.source)
+        tgt = capability_vector(self.target)
+        return {axis: t / s for axis, s, t in
+                zip(CAPABILITY_AXES, src, tgt)}
+
+    def compute_ratio(self, dtype: str) -> float:
+        """FLOP/s ratio at ``dtype`` precision (compute-bound scaling)."""
+        if dtype in ("bfloat16", "float16"):
+            return self.target.flops_bf16 / self.source.flops_bf16
+        return self.target.flops_f32 / self.source.flops_f32
+
+    def bandwidth_ratio(self) -> float:
+        """HBM bandwidth ratio (memory-bound scaling)."""
+        return self.target.hbm_bw / self.source.hbm_bw
+
+    def vmem_ratio(self) -> float:
+        """On-chip memory ratio — the *feasibility* axis: configs sized
+        for a larger VMEM overflow a smaller one."""
+        return self.target.vmem_bytes / self.source.vmem_bytes
+
+    def blend_ratio(self, dtype: str) -> float:
+        """Capability-only time-scaling guess when no workload model is
+        available: the geometric mean of the compute and bandwidth
+        scalings (a kernel is somewhere between compute- and
+        memory-bound; without its workload we cannot know where)."""
+        return 1.0 / math.sqrt(self.compute_ratio(dtype)
+                               * self.bandwidth_ratio())
+
+    # -- similarity ------------------------------------------------------------
+
+    def similarity(self) -> float:
+        """Capability similarity in (0, 1]: ``exp(-rms(log2 ratios))``.
+
+        1.0 for identical specs; ~0.5 for the shipped tpu-v5e/tpu-v4
+        pair (sibling accelerators, 1.4-2x apart per axis); effectively
+        0 for tpu -> cpu (orders of magnitude apart everywhere). The RMS
+        over axes keeps the scale independent of how many capability
+        axes exist.
+        """
+        logs = [math.log2(r) for r in self.ratios().values()]
+        rms = math.sqrt(sum(x * x for x in logs) / len(logs))
+        return math.exp(-rms)

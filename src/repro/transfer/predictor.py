@@ -1,0 +1,277 @@
+"""Transfer predictor: recorded source spaces -> ranked target configs.
+
+The pipeline per (kernel, scenario):
+
+  1. fit the :func:`repro.tuner.costmodel.fit_from_dataset` ridge
+     surrogate on the *source* device's recorded space — a smoothed,
+     data-grounded view of the landscape (raw scores carry measurement
+     ruggedness that does not transfer; the fitted trend does);
+  2. calibrate each feasible config's surrogate score to the target
+     device through the :class:`~repro.transfer.model.DeviceModel`
+     capability ratios — with the kernel's workload hook available, the
+     per-config compute/memory balance picks the exact blend (and VMEM
+     overflow on the target marks the config infeasible there); without
+     it, the capability-only geometric blend stands in;
+  3. rank, keep the winner, and score *confidence* — device similarity x
+     (surrogate fit quality, space coverage) — which decides whether the
+     resulting ``transfer``-provenance record is eligible to serve
+     (``Wisdom.select`` gates on it) and how urgent verification is.
+
+Everything is deterministic: same dataset + same target -> byte-identical
+records on any host (transfer provenance carries no timestamps).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.core.device import get_device
+from repro.core.param import Config
+from repro.core.registry import get_kernel
+from repro.core.wisdom import (TRANSFER_MIN_CONFIDENCE, WisdomRecord,
+                               make_transfer_provenance)
+from repro.tuner.costmodel import CostModel, fit_from_dataset
+from repro.tunebench.dataset import SpaceDataset
+
+__all__ = ["TransferPrediction", "TransferResult", "transfer_scenario",
+           "transfer_store"]
+
+#: Confidence mix: sqrt(similarity) x (base + fit-quality + coverage
+#: terms). Multiplicative in similarity so a dissimilar device pair can
+#: never be rescued by a good fit; the additive terms reward a surrogate
+#: that learned the landscape and a space that was densely recorded.
+CONFIDENCE_BASE = 0.30
+CONFIDENCE_FIT_WEIGHT = 0.50
+CONFIDENCE_COVERAGE_WEIGHT = 0.20
+
+#: Confidence penalty when the kernel's workload hook is unavailable and
+#: calibration had to fall back to the capability-only blend ratio.
+#: Additionally scaled by the VMEM ratio when the target's on-chip
+#: memory is *smaller* than the source's: without the workload hook
+#: there is no per-config feasibility check, and a source config sized
+#: for the bigger memory may not compile on the target at all — the
+#: shrinking-memory direction must not clear the serving gate blind.
+CAPABILITY_ONLY_FACTOR = 0.8
+
+#: Cap on space enumeration when computing recorded coverage.
+_COVERAGE_CAP = 4096
+
+
+@dataclass
+class TransferPrediction:
+    """One source config's predicted standing on the target device.
+
+    ``source_us`` is the *recorded* source score, ``smoothed_us`` the
+    ridge surrogate's view of it (measurement ruggedness does not
+    transfer; the fitted trend does). Ranking uses the smoothed score
+    calibrated through the capability model (``rank_us``); the
+    ``predicted_us`` the record carries — what observed serve latency is
+    verified against — calibrates the recorded score instead, because
+    the surrogate's absolute level extrapolates poorly at space corners
+    while the recorded value is ground truth for that exact config.
+    """
+
+    config: Config
+    source_us: float         # recorded on the source device
+    smoothed_us: float       # ridge-surrogate fit of the source score
+    rank_us: float           # smoothed_us x calibration ratio (sort key)
+    predicted_us: float      # source_us x calibration ratio (verify target)
+
+    def to_json(self) -> dict:
+        return {"config": dict(self.config),
+                "source_us": round(self.source_us, 6),
+                "smoothed_us": round(self.smoothed_us, 6),
+                "rank_us": round(self.rank_us, 6),
+                "predicted_us": round(self.predicted_us, 6)}
+
+
+@dataclass
+class TransferResult:
+    """Everything the transfer of one scenario produced.
+
+    Carries the ranked predictions, the confidence score with its
+    components, and enough identity to mint a ``transfer``-provenance
+    :class:`~repro.core.wisdom.WisdomRecord` via :meth:`record`.
+
+    Example::
+
+        result = transfer_scenario(dataset, "tpu-v4")
+        if result.eligible():
+            wisdom.add(result.record())
+    """
+
+    kernel: str
+    source_device: str
+    target_device: str
+    problem_size: tuple[int, ...]
+    dtype: str
+    predictions: list[TransferPrediction]
+    confidence: float
+    components: dict = field(default_factory=dict)
+
+    def best(self) -> TransferPrediction | None:
+        """The top-ranked prediction (None when nothing transferred —
+        e.g. every source config overflows the target's VMEM)."""
+        return self.predictions[0] if self.predictions else None
+
+    def eligible(self, min_confidence: float | None = None) -> bool:
+        """Whether the result clears the serving gate (defaults to
+        :data:`~repro.core.wisdom.TRANSFER_MIN_CONFIDENCE`)."""
+        threshold = (TRANSFER_MIN_CONFIDENCE if min_confidence is None
+                     else float(min_confidence))
+        return self.best() is not None and self.confidence >= threshold
+
+    def record(self) -> WisdomRecord:
+        """The transferred wisdom record for the target device (raises
+        ``ValueError`` when there is no prediction at all)."""
+        top = self.best()
+        if top is None:
+            raise ValueError(
+                f"no transferable config for {self.kernel} "
+                f"{self.source_device} -> {self.target_device}")
+        target = get_device(self.target_device)
+        return WisdomRecord(
+            device_kind=target.kind, device_family=target.family,
+            problem_size=tuple(self.problem_size), dtype=self.dtype,
+            config=dict(top.config),
+            score_us=round(top.predicted_us, 6),
+            provenance=make_transfer_provenance(
+                source_device=self.source_device,
+                source_entries=int(self.components.get("entries", 0)),
+                confidence=self.confidence,
+                predicted_us=round(top.predicted_us, 6),
+                predictor=self.components.get("calibration", "capability")))
+
+    def to_json(self, top: int = 5) -> dict:
+        return {
+            "kernel": self.kernel,
+            "source_device": self.source_device,
+            "target_device": self.target_device,
+            "problem_size": list(self.problem_size),
+            "dtype": self.dtype,
+            "confidence": self.confidence,
+            "components": dict(self.components),
+            "predictions": [p.to_json() for p in self.predictions[:top]],
+        }
+
+
+def _coverage(dataset: SpaceDataset) -> float:
+    """Fraction of the (capped) valid space the recording covers."""
+    total = dataset.space().valid_cardinality(cap=_COVERAGE_CAP)
+    if total <= 0:
+        return 0.0
+    return min(1.0, len(dataset.evaluations) / total)
+
+
+def transfer_scenario(dataset: SpaceDataset, target_kind: str,
+                      builder=None) -> TransferResult:
+    """Transfer one recorded scenario to an untuned target device.
+
+    ``builder`` supplies the kernel's workload hook for per-config
+    calibration; when omitted it is looked up in the registry, and when
+    the kernel is unknown on this host the capability-only blend is used
+    (with a confidence penalty). Raises ``ValueError`` for a
+    source == target transfer (nothing to predict — the dataset already
+    *is* the target's ground truth) and when the dataset has too few
+    feasible entries to fit the surrogate.
+
+    Example::
+
+        ds = SpaceDataset.load("matmul--tpu-v5e--256x256x256--float32"
+                               ".space.json")
+        result = transfer_scenario(ds, "tpu-v4")
+        result.record()     # transfer-provenance WisdomRecord
+    """
+    if dataset.device_kind == target_kind:
+        raise ValueError(
+            f"dataset {dataset.name()} is already recorded on "
+            f"{target_kind}; transfer needs a different target device")
+    source = get_device(dataset.device_kind)
+    target = get_device(target_kind)
+    from .model import DeviceModel
+    model = DeviceModel(source, target)
+    fitted = fit_from_dataset(dataset)
+    if builder is None:
+        try:
+            builder = get_kernel(dataset.kernel)
+        except KeyError:
+            builder = None
+    calibration = "workload" if builder is not None else "capability"
+    source_cost = CostModel(source, noise_sigma=0.0)
+    target_cost = CostModel(target, noise_sigma=0.0)
+
+    predictions: list[tuple[str, TransferPrediction]] = []
+    for entry in dataset.feasible():
+        base = fitted.predict(entry.config)
+        if builder is not None:
+            w = builder.make_workload(entry.config, dataset.problem_size,
+                                      dataset.dtype)
+            ts = source_cost.time(w, dataset.dtype)
+            tt = target_cost.time(w, dataset.dtype)
+            if not (math.isfinite(ts) and math.isfinite(tt)) or ts <= 0:
+                continue        # infeasible on the target (e.g. VMEM)
+            ratio = tt / ts
+        else:
+            ratio = model.blend_ratio(dataset.dtype)
+        predictions.append((dataset.key_for(entry.config),
+                            TransferPrediction(
+                                config=dict(entry.config),
+                                source_us=entry.score_us,
+                                smoothed_us=base,
+                                rank_us=base * ratio,
+                                predicted_us=entry.score_us * ratio)))
+    # Rank by calibrated smoothed target time; the config-hash key makes
+    # equal predictions resolve identically on every host.
+    predictions.sort(key=lambda kp: (kp[1].rank_us, kp[0]))
+    ranked = [p for _k, p in predictions]
+
+    fit_quality = fitted.fit_quality()
+    similarity = model.similarity()
+    coverage = _coverage(dataset)
+    confidence = (math.sqrt(similarity)
+                  * (CONFIDENCE_BASE
+                     + CONFIDENCE_FIT_WEIGHT * fit_quality
+                     + CONFIDENCE_COVERAGE_WEIGHT * coverage))
+    if calibration == "capability":
+        confidence *= CAPABILITY_ONLY_FACTOR * min(1.0, model.vmem_ratio())
+    confidence = round(min(1.0, max(0.0, confidence)), 6)
+    return TransferResult(
+        kernel=dataset.kernel,
+        source_device=dataset.device_kind, target_device=target_kind,
+        problem_size=tuple(dataset.problem_size), dtype=dataset.dtype,
+        predictions=ranked, confidence=confidence,
+        components={
+            "similarity": round(similarity, 6),
+            "fit_quality": round(fit_quality, 6),
+            "coverage": round(coverage, 6),
+            "calibration": calibration,
+            "entries": len(dataset.evaluations),
+            "transferable": len(ranked),
+        })
+
+
+def transfer_store(store, target_kind: str, kernel: str | None = None
+                   ) -> list[TransferResult]:
+    """Transfer every recorded scenario in a
+    :class:`~repro.tunebench.DatasetStore` to ``target_kind``.
+
+    Scenarios already recorded *on* the target device are skipped (they
+    need no prediction), as are datasets too small to fit the surrogate.
+    Results come back in deterministic filename order.
+
+    Example::
+
+        results = transfer_store(DatasetStore("datasets"), "tpu-v4")
+        records = [r.record() for r in results if r.eligible()]
+    """
+    results: list[TransferResult] = []
+    for kern, dev, _problem, _dtype, path in store.scenarios(kernel=kernel):
+        if dev == target_kind:
+            continue
+        dataset = SpaceDataset.load(path)
+        try:
+            results.append(transfer_scenario(dataset, target_kind))
+        except ValueError:
+            continue            # too few feasible entries to fit
+    return results

@@ -336,6 +336,41 @@ class DatasetStore:
             return []
         return sorted(self.root.glob(f"*{DATASET_SUFFIX}"))
 
+    def scenarios(self, kernel: str | None = None,
+                  device_kind: str | None = None
+                  ) -> list[tuple[str, str, tuple[int, ...], str, Path]]:
+        """Recorded (kernel, device_kind, problem, dtype, path) tuples,
+        parsed from the store's deterministic filenames and optionally
+        filtered. This is how the transfer layer discovers which *source*
+        devices have recorded spaces for a kernel without opening every
+        file. Files whose names do not parse are skipped (they were not
+        written by a :class:`DatasetStore`).
+
+        Example::
+
+            for kern, dev, problem, dtype, path in store.scenarios(
+                    kernel="matmul"):
+                ...
+        """
+        out = []
+        for path in self.datasets():
+            # rsplit: device/problem/dtype never contain "--", but a
+            # kernel name could — it owns whatever is left on the left.
+            parts = path.name[:-len(DATASET_SUFFIX)].rsplit("--", 3)
+            if len(parts) != 4:
+                continue
+            kern, dev, problem_s, dtype = parts
+            try:
+                problem = tuple(int(d) for d in problem_s.split("x") if d)
+            except ValueError:
+                continue
+            if kernel is not None and kern != kernel:
+                continue
+            if device_kind is not None and dev != device_kind:
+                continue
+            out.append((kern, dev, problem, dtype, path))
+        return out
+
 
 def history_from_dataset(dataset: SpaceDataset,
                          space: ConfigSpace | None = None

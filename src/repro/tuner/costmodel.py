@@ -196,6 +196,22 @@ class FittedCostModel:
         return float(math.exp(self._features(config) @ self.weights
                               + self.mean_log))
 
+    def fit_quality(self) -> float:
+        """How much structure the fit explains, in [0, 1].
+
+        ``1 - rmse_log / baseline_rmse_log`` clamped to [0, 1]: 0 means
+        the surrogate is no better than predicting the mean (it learned
+        nothing), values near 1 mean the recorded landscape is almost
+        fully captured. The transfer layer folds this into its
+        confidence score — a prediction re-ranked through a surrogate
+        that learned nothing deserves no trust.
+        """
+        if self.baseline_rmse_log <= 0:
+            return 0.0
+        return float(min(1.0, max(0.0,
+                                  1.0 - self.rmse_log
+                                  / self.baseline_rmse_log)))
+
 
 def fit_from_dataset(dataset, ridge: float = 1e-3) -> FittedCostModel:
     """Fit a :class:`FittedCostModel` from a recorded space.

@@ -322,6 +322,102 @@ def test_pull_tick_interval_and_kernel_refresh(tmp_path):
     assert len(local.load("k")) == 1
 
 
+class FlakyTransport(MemoryTransport):
+    """MemoryTransport that raises on fetches of one kernel until
+    ``heal()`` — the shared-mount-hiccup simulator."""
+
+    def __init__(self, fail_on: str):
+        super().__init__()
+        self.fail_on = fail_on
+        self.failing = True
+
+    def heal(self):
+        self.failing = False
+
+    def fetch(self, kernel_name):
+        if self.failing and kernel_name == self.fail_on:
+            raise OSError(f"transport lost mid-pull fetching {kernel_name}")
+        return super().fetch(kernel_name)
+
+
+def test_pull_is_transactional_on_transport_failure(tmp_path):
+    """ISSUE 5 satellite: a transport dying mid-pull must leave the local
+    store byte-identical — no kernel from earlier in the same pull may
+    have been persisted (partial store state)."""
+    transport = FlakyTransport(fail_on="bbb")
+    transport.publish("aaa", Wisdom("aaa", [rec(config={"block": 2})])
+                      .to_doc())
+    transport.publish("bbb", Wisdom("bbb", [rec(config={"block": 3})])
+                      .to_doc())
+    local = WisdomStore(tmp_path / "local")
+    sync = PullSync(local, transport, interval=1)
+    with pytest.raises(OSError):
+        sync.pull()
+    # "aaa" fetched fine *before* "bbb" died — it must still not be saved
+    assert local.kernels() == []
+    transport.heal()
+    sync.pull()
+    assert local.kernels() == ["aaa", "bbb"]
+
+
+def test_tick_swallows_transport_failure_and_recovers(tmp_path):
+    """The serving-loop hook must never let a sync hiccup escape into
+    the decode step: failures are counted, the previously pulled wisdom
+    stays served, and the next due tick retries."""
+    transport = FlakyTransport(fail_on="k")
+    served = Wisdom("k", [rec(score=5.0, config={"block": 9})])
+    local = WisdomStore(tmp_path / "local")
+    local.save(served)
+    transport.publish("k", Wisdom("k", [rec(score=1.0,
+                                            config={"block": 4})]).to_doc())
+    sync = PullSync(local, transport, interval=2)
+    assert sync.tick() is None                 # due, but transport raised
+    assert sync.failures == 1 and isinstance(sync.last_error, OSError)
+    assert local.load("k").records[0].config == {"block": 9}   # intact
+    assert sync.tick() is None                 # off-interval: no attempt
+    assert sync.failures == 1
+    transport.heal()
+    assert sync.tick() is not None             # due again: pull succeeds
+    assert local.load("k").records[0].config == {"block": 4}
+
+
+def test_serve_engine_survives_sync_failure_mid_pull(tmp_path):
+    """ServeEngine end to end: the transport raising mid-pull must not
+    kill the cohort, and the engine keeps serving from the wisdom it
+    already had (no partial store state)."""
+    import jax.numpy as jnp
+    from repro.serve.engine import Request, ServeEngine
+
+    class TinyLM:
+        def init_cache(self, n_slots, max_seq):
+            return {"pos": jnp.zeros((), jnp.int32)}
+
+        def decode_step(self, params, cache, tok):
+            return jnp.zeros((tok.shape[0], 1, 8), jnp.float32), cache
+
+    transport = FlakyTransport(fail_on="bbb")
+    transport.publish("aaa", Wisdom("aaa", [rec(config={"block": 2})])
+                      .to_doc())
+    transport.publish("bbb", Wisdom("bbb", [rec(config={"block": 3})])
+                      .to_doc())
+    local = WisdomStore(tmp_path / "local")
+    before = Wisdom("aaa", [rec(score=1.0, config={"block": 8})])
+    local.save(before)
+    before_bytes = json.dumps(local.load("aaa").to_doc(), sort_keys=True)
+
+    sync = PullSync(local, transport, interval=2)
+    eng = ServeEngine(TinyLM(), params={}, n_slots=1, max_seq=16, sync=sync)
+    assert eng.submit(Request(0, np.array([1, 2], np.int32),
+                              max_new_tokens=3))
+    out = eng.run()
+    assert out[0] and eng.steps_run > 0        # serving completed
+    assert sync.failures > 0
+    # no partial state: neither kernel changed under the engine
+    assert local.kernels() == ["aaa"]
+    assert json.dumps(local.load("aaa").to_doc(),
+                      sort_keys=True) == before_bytes
+
+
 def test_serve_engine_ticks_sync(tmp_path):
     import jax.numpy as jnp
     from repro.serve.engine import Request, ServeEngine

@@ -10,6 +10,7 @@ import inspect
 import pytest
 
 import repro.fleet
+import repro.transfer
 import repro.tunebench
 import repro.tuner
 
@@ -17,6 +18,7 @@ MODULES = {
     "repro.tuner": (repro.tuner, True),
     "repro.fleet": (repro.fleet, True),
     "repro.tunebench": (repro.tunebench, False),   # docstring only
+    "repro.transfer": (repro.transfer, False),     # docstring only
 }
 
 

@@ -192,6 +192,72 @@ def test_lease_claim_conflict_expiry_reclaim():
     assert fetch_lease(bus, job.job_id, "s000").state == "done"
 
 
+def test_lease_claimable_exactly_at_expiry_boundary():
+    """ISSUE 5 satellite: ``expires_at == now`` means *expired* — the
+    boundary instant belongs to the reclaimer, not the holder (claim
+    checks ``expires_at > now``), and the stale holder discovers the
+    hand-off at its next heartbeat."""
+    from repro.fleet import LeaseLost, heartbeat
+
+    bus = ControlBus(MemoryTransport())
+    clock = ManualClock()
+    job = _job()
+    stale = claim_shard(bus, job, "s000", "w0", clock, ttl_s=30.0)
+    clock.advance(30.0)                       # now == expires_at exactly
+    assert clock.now() == stale.expires_at
+    fresh = claim_shard(bus, job, "s000", "w1", clock, ttl_s=30.0)
+    assert fresh is not None and fresh.claims == 2
+    with pytest.raises(LeaseLost):
+        heartbeat(bus, stale, clock, ttl_s=30.0)
+
+
+def test_heartbeat_at_exact_expiry_renews_unclaimed_lease():
+    """The mirror case: at the boundary instant with no reclaimer yet,
+    the holder's heartbeat still owns the nonce and renews — expiry is
+    only enforced through claims, never by silently dropping a live
+    worker mid-shard."""
+    from repro.fleet import heartbeat
+
+    bus = ControlBus(MemoryTransport())
+    clock = ManualClock()
+    job = _job()
+    lease = claim_shard(bus, job, "s000", "w0", clock, ttl_s=30.0)
+    clock.advance(30.0)                       # now == expires_at exactly
+    renewed = heartbeat(bus, lease, clock, ttl_s=30.0)
+    assert renewed.expires_at == clock.now() + 30.0
+    assert renewed.claims == 1                # no hand-off happened
+    assert claim_shard(bus, job, "s000", "w1", clock, ttl_s=30.0) is None
+
+
+def test_reclaim_racing_same_tick_heartbeat_leaves_one_owner():
+    """Reclaim and heartbeat land on the same clock tick: whichever
+    publish wins, exactly one worker owns the shard afterwards and the
+    other finds out through LeaseLost — never two live owners."""
+    from repro.fleet import LeaseLost, heartbeat
+
+    # ordering A: the stale holder heartbeats first, reclaim bounces
+    bus = ControlBus(MemoryTransport())
+    clock = ManualClock()
+    job = _job()
+    holder = claim_shard(bus, job, "s000", "w0", clock, ttl_s=30.0)
+    clock.advance(30.0)
+    heartbeat(bus, holder, clock, ttl_s=30.0)
+    assert claim_shard(bus, job, "s000", "w1", clock, ttl_s=30.0) is None
+    assert fetch_lease(bus, job.job_id, "s000").worker == "w0"
+
+    # ordering B: the reclaimer publishes first, the heartbeat refuses
+    bus = ControlBus(MemoryTransport())
+    clock = ManualClock()
+    holder = claim_shard(bus, job, "s000", "w0", clock, ttl_s=30.0)
+    clock.advance(30.0)
+    fresh = claim_shard(bus, job, "s000", "w1", clock, ttl_s=30.0)
+    assert fresh is not None
+    with pytest.raises(LeaseLost):
+        heartbeat(bus, holder, clock, ttl_s=30.0)
+    cur = fetch_lease(bus, job.job_id, "s000")
+    assert cur.worker == "w1" and cur.claims == 2
+
+
 def test_stalled_worker_cannot_steal_back_reclaimed_lease():
     """A worker that stalls past its TTL must abandon the shard at its
     next checkpoint, not overwrite the reclaimer's lease."""

@@ -1,0 +1,153 @@
+"""Property-based round-trip guarantees for the two on-disk JSON schemas
+(ISSUE 5 satellite): arbitrary *valid* wisdom records and dataset entries
+must survive ``migrate_doc`` / ``migrate_dataset_doc`` plus a full
+serialize -> deserialize -> serialize cycle byte-identically. Runs under
+real ``hypothesis`` when installed, else the deterministic compat shim
+(``tests/_hypothesis_compat.py``)."""
+
+import json
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.param import ConfigSpace
+from repro.core.wisdom import (WISDOM_VERSION, Wisdom, WisdomRecord,
+                               migrate_doc)
+from repro.tunebench import SpaceDataset, migrate_dataset_doc
+
+DEVICES = [("tpu-v5e", "tpu-v5"), ("tpu-v4", "tpu-v4"), ("gpu-x", "gpu-x"),
+           ("cpu", "cpu")]
+DTYPES = ["float32", "bfloat16", "float16"]
+KEYS = ["block_m", "block_n", "unroll", "order", "semantics"]
+
+
+def canon(doc: dict) -> str:
+    return json.dumps(doc, sort_keys=True)
+
+
+# ------------------------------ wisdom records -------------------------------
+
+def record_strategy_draw(data) -> WisdomRecord:
+    device, family = data.draw(st.sampled_from(DEVICES))
+    problem = tuple(data.draw(
+        st.lists(st.integers(1, 8192), min_size=1, max_size=4)))
+    n_cfg = data.draw(st.integers(1, 4))
+    config = {KEYS[i]: data.draw(st.integers(1, 512)) for i in range(n_cfg)}
+    prov_keys = data.draw(st.lists(st.sampled_from(
+        ["strategy", "host", "user", "note", "objective"]),
+        min_size=0, max_size=3, unique=True))
+    provenance = {k: f"v-{data.draw(st.integers(0, 99))}" for k in prov_keys}
+    provenance["evaluations"] = data.draw(st.integers(0, 10_000))
+    lineage = [{"host": f"h{data.draw(st.integers(0, 9))}",
+                "date": f"2026-0{data.draw(st.integers(1, 7))}-01"}
+               for _ in range(data.draw(st.integers(0, 3)))]
+    return WisdomRecord(
+        device_kind=device, device_family=family, problem_size=problem,
+        dtype=data.draw(st.sampled_from(DTYPES)), config=config,
+        score_us=data.draw(st.floats(1e-3, 1e9)),
+        provenance=provenance, lineage=lineage)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_wisdom_doc_roundtrips_byte_identically(data):
+    n = data.draw(st.integers(0, 5))
+    records = [record_strategy_draw(data) for _ in range(n)]
+    w = Wisdom("propk")
+    for r in records:
+        w.add(r, keep_best=False)
+    doc = w.to_doc()
+    assert doc["version"] == WISDOM_VERSION
+
+    # migrating a current-version document is a byte-exact no-op
+    assert canon(migrate_doc(doc)) == canon(doc)
+
+    # full JSON cycle: dump -> load -> from_json -> to_doc, byte-identical
+    wire = json.loads(json.dumps(doc))
+    back = Wisdom("propk", [WisdomRecord.from_json(r)
+                            for r in wire["records"]])
+    assert canon(back.to_doc()) == canon(doc)
+
+    # identity is stable across the cycle too
+    assert [r.record_id() for r in back.records] == \
+        [r.record_id() for r in w.records]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_v1_wisdom_doc_migration_is_stable(data):
+    """A v1 document (no lineage, no version) migrates to the current
+    schema; migrating the migrated document changes nothing further."""
+    n = data.draw(st.integers(0, 4))
+    records = []
+    for _ in range(n):
+        r = record_strategy_draw(data)
+        d = r.to_json()
+        del d["lineage"]
+        records.append(d)
+    v1 = {"kernel": "propk", "records": records}
+    once = migrate_doc(v1)
+    assert once["version"] == WISDOM_VERSION
+    assert all(rec["lineage"] == [] for rec in once["records"])
+    assert canon(migrate_doc(once)) == canon(once)
+    # and the original input was not mutated
+    assert "version" not in v1
+    assert all("lineage" not in rec for rec in v1["records"])
+
+
+# ------------------------------ dataset entries ------------------------------
+
+def dataset_strategy_draw(data) -> SpaceDataset:
+    space = ConfigSpace()
+    n_params = data.draw(st.integers(1, 3))
+    for i in range(n_params):
+        values = sorted(data.draw(st.lists(st.integers(1, 64), min_size=1,
+                                           max_size=4, unique=True)))
+        space.tune(KEYS[i], values, values[0])
+    device, _family = data.draw(st.sampled_from(DEVICES))
+    problem = tuple(data.draw(
+        st.lists(st.integers(1, 1024), min_size=1, max_size=3)))
+    ds = SpaceDataset("propk", space, problem,
+                      data.draw(st.sampled_from(DTYPES)), device)
+    n_entries = data.draw(st.integers(0, 6))
+    for _ in range(n_entries):
+        config = {name: data.draw(st.sampled_from(list(p.values)))
+                  for name, p in space.params.items()}
+        if data.draw(st.booleans()):
+            ds.add(config, data.draw(st.floats(1e-3, 1e9)), "ok")
+        else:
+            ds.add(config, float("inf"), "infeasible", error="vmem")
+    return ds
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_dataset_doc_roundtrips_byte_identically(data):
+    ds = dataset_strategy_draw(data)
+    doc = ds.to_doc()
+
+    # migrating a current-version document is a byte-exact no-op
+    assert canon(migrate_dataset_doc(doc)) == canon(doc)
+
+    # full JSON cycle through the wire format
+    wire = json.loads(json.dumps(doc))
+    back = SpaceDataset.from_doc(wire)
+    assert canon(back.to_doc()) == canon(doc)
+
+    # queries agree after the cycle (keys, optimum, feasibility split)
+    assert sorted(back.evaluations) == sorted(ds.evaluations)
+    b1, b2 = ds.best(), back.best()
+    assert (b1 is None) == (b2 is None)
+    if b1 is not None:
+        assert b1.config == b2.config and b1.score_us == b2.score_us
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_versionless_dataset_doc_migration_is_stable(data):
+    ds = dataset_strategy_draw(data)
+    doc = ds.to_doc()
+    del doc["version"]
+    once = migrate_dataset_doc(doc)
+    assert once["version"] == 1
+    assert canon(migrate_dataset_doc(once)) == canon(once)
+    assert "version" not in doc        # input not mutated

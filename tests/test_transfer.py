@@ -1,0 +1,406 @@
+"""Cross-device wisdom transfer: capability model, predictor, confidence
+gating, selection tier ordering, and the fleet predict -> verify ->
+promote loop (ISSUE 5).
+
+Covers the acceptance criteria: ``select()`` returns transferred records
+only when confidence clears the threshold and never lets them shadow an
+exact-device measurement; the held-out-device benchmark reaches the
+pinned fraction-of-optimum gate with a byte-deterministic report.
+"""
+
+import json
+
+import pytest
+
+from repro.core.builder import KernelBuilder
+from repro.core.device import get_device
+from repro.core.registry import register, unregister
+from repro.core.wisdom import (TRANSFER_MIN_CONFIDENCE, Wisdom, WisdomRecord,
+                               make_provenance, make_transfer_provenance)
+from repro.core.workload import Workload
+from repro.distrib import MemoryTransport, PullSync, WisdomStore, merge_wisdom
+from repro.distrib.merge import better_record
+from repro.fleet import (Coordinator, ControlBus, FleetWorker, ManualClock,
+                         publish_latency)
+from repro.online.tracker import MISS_TIERS, format_key
+from repro.transfer import (DeviceModel, holdout_report, transfer_scenario,
+                            transfer_store)
+from repro.transfer.cli import main as transfer_cli
+from repro.tunebench import DatasetStore, record_space
+
+KERNEL = "transfertestk"
+
+
+def _make_test_kernel() -> KernelBuilder:
+    b = KernelBuilder(KERNEL, source="tests/test_transfer.py")
+    b.tune("tile", (256, 512, 1024, 2048, 4608), default=256)
+    b.tune("unroll", (1, 2, 4), default=1)
+
+    @b.workload
+    def _wl(config, problem, dtype):
+        n = 1
+        for d in problem:
+            n *= int(d)
+        tile = config["tile"]
+        # tile=4608 -> 85MB working set: beyond the 4x spill grace on
+        # tpu-v5e (16MB VMEM) but comfortably inside it on tpu-v4 (32MB)
+        # — the feasibility asymmetry cross-device transfer must respect.
+        return Workload(flops=2.0 * n * config["unroll"],
+                        hbm_bytes=4.0 * n * (1 + 256 / tile),
+                        vmem_bytes=tile * tile * 4,
+                        grid=max(n // tile, 1), lane_extent=min(tile, 256),
+                        unroll_ways=config["unroll"])
+
+    return b
+
+
+BUILDER = _make_test_kernel()
+PROBLEM = (512, 512)
+SCENARIO = ("tpu-v4", PROBLEM, "float32")
+
+
+@pytest.fixture(autouse=True)
+def _registered_kernel():
+    register(BUILDER)
+    yield
+    unregister(KERNEL)
+
+
+def _source_dataset(device="tpu-v5e"):
+    return record_space(BUILDER, PROBLEM, "float32", device)
+
+
+def measured(device="tpu-v4", family="tpu-v4", problem=PROBLEM,
+             dtype="float32", score=100.0, config=None):
+    return WisdomRecord(device_kind=device, device_family=family,
+                        problem_size=tuple(problem), dtype=dtype,
+                        config=config or {"tile": 256, "unroll": 1},
+                        score_us=score,
+                        provenance=make_provenance(strategy="bayes",
+                                                   evals=20))
+
+
+def transferred(device="tpu-v4", family="tpu-v4", problem=PROBLEM,
+                dtype="float32", score=50.0, config=None,
+                confidence=0.9):
+    return WisdomRecord(device_kind=device, device_family=family,
+                        problem_size=tuple(problem), dtype=dtype,
+                        config=config or {"tile": 1024, "unroll": 2},
+                        score_us=score,
+                        provenance=make_transfer_provenance(
+                            "tpu-v5e", 15, confidence, score))
+
+
+# ----------------------------- capability model ------------------------------
+
+def test_device_model_ratios_and_similarity():
+    m = DeviceModel.between("tpu-v5e", "tpu-v4")
+    assert m.vmem_ratio() == pytest.approx(2.0)
+    assert m.compute_ratio("bfloat16") == pytest.approx(275e12 / 197e12)
+    assert m.bandwidth_ratio() == pytest.approx(1228 / 819)
+    # similarity: identical > sibling accelerator > different architecture
+    same = DeviceModel.between("tpu-v5e", "tpu-v5e").similarity()
+    sibling = m.similarity()
+    alien = DeviceModel.between("tpu-v5e", "cpu").similarity()
+    assert same == pytest.approx(1.0)
+    assert 0.3 < sibling < 0.8
+    assert alien < 0.01
+
+
+# ------------------------------- predictor -----------------------------------
+
+def test_transfer_is_deterministic_and_vmem_aware():
+    ds = _source_dataset()
+    r1 = transfer_scenario(ds, "tpu-v4")
+    r2 = transfer_scenario(ds, "tpu-v4")
+    assert json.dumps(r1.record().to_json(), sort_keys=True) == \
+        json.dumps(r2.record().to_json(), sort_keys=True)
+    assert r1.record().record_id() == r2.record().record_id()
+    # tile=4096 is infeasible on the 16MB source, so it was never
+    # recorded feasible — but nothing feasible on the source may be
+    # predicted infeasible on the *larger* target either.
+    assert r1.components["transferable"] == len(ds.feasible())
+
+
+def test_transfer_reverse_direction_drops_target_infeasible_configs():
+    """tpu-v4 -> tpu-v5e shrinks VMEM 2x: source-feasible big-tile
+    configs that blow the target's spill grace must not be predicted."""
+    ds = _source_dataset("tpu-v4")
+    result = transfer_scenario(ds, "tpu-v5e")
+    assert result.components["transferable"] < len(ds.feasible())
+    for p in result.predictions:
+        assert p.config["tile"] < 4608
+
+
+def test_transfer_refuses_same_device_and_tiny_datasets():
+    ds = _source_dataset()
+    with pytest.raises(ValueError, match="already recorded"):
+        transfer_scenario(ds, "tpu-v5e")
+    tiny = record_space(BUILDER, PROBLEM, "float32", "tpu-v5e", limit=2)
+    with pytest.raises(ValueError, match="at least 3"):
+        transfer_scenario(tiny, "tpu-v4")
+
+
+def test_confidence_gates_by_device_similarity():
+    ds = _source_dataset()
+    sibling = transfer_scenario(ds, "tpu-v4")
+    alien = transfer_scenario(ds, "cpu")
+    assert sibling.eligible()
+    assert sibling.confidence >= TRANSFER_MIN_CONFIDENCE
+    assert not alien.eligible()
+    assert alien.confidence < TRANSFER_MIN_CONFIDENCE
+    rec = sibling.record()
+    assert rec.is_transferred()
+    assert rec.transfer_confidence() == sibling.confidence
+    assert rec.device_kind == "tpu-v4"
+    assert rec.provenance["source_device"] == "tpu-v5e"
+    assert rec.provenance["predicted_us"] == rec.score_us
+
+
+def test_capability_only_transfer_gated_when_target_vmem_shrinks():
+    """Without the workload hook there is no per-config feasibility
+    check, so predictions into a *smaller* VMEM must not clear the
+    serving gate (a source config sized for the bigger memory might not
+    compile on the target); the growing-VMEM direction stays eligible,
+    just penalized."""
+    grow_ds = _source_dataset("tpu-v5e")     # recorded while registered
+    shrink_ds = _source_dataset("tpu-v4")
+    unregister(KERNEL)                       # registry lookup now fails
+    try:
+        grow = transfer_scenario(grow_ds, "tpu-v4")
+        shrink = transfer_scenario(shrink_ds, "tpu-v5e")
+    finally:
+        register(BUILDER)
+    assert grow.components["calibration"] == "capability"
+    assert grow.eligible()                   # 2x more VMEM: safe to serve
+    assert shrink.components["calibration"] == "capability"
+    assert not shrink.eligible()             # half the VMEM: gated
+    assert shrink.confidence < TRANSFER_MIN_CONFIDENCE
+
+
+def test_transfer_store_discovers_and_skips_target(tmp_path):
+    store = DatasetStore(tmp_path)
+    store.save(_source_dataset("tpu-v5e"))
+    store.save(_source_dataset("tpu-v4"))
+    results = transfer_store(store, "tpu-v4")
+    assert [r.source_device for r in results] == ["tpu-v5e"]
+    assert results[0].target_device == "tpu-v4"
+
+
+# --------------------------- selection tier ordering -------------------------
+
+DEFAULT = {"tile": 256, "unroll": 1}
+
+
+def test_transferred_never_shadows_exact_measurement():
+    w = Wisdom(KERNEL)
+    w.add(measured(score=100.0, config={"tile": 512, "unroll": 1}))
+    w.add(transferred(score=1.0, confidence=0.99,
+                      config={"tile": 1024, "unroll": 4}))
+    cfg, tier = w.select("tpu-v4", PROBLEM, "float32", DEFAULT)
+    assert (tier, cfg["tile"]) == ("exact", 512)
+
+
+def test_transfer_tier_sits_between_exact_and_fallback():
+    w = Wisdom(KERNEL)
+    # fuzzy measured candidates on the same device, the family, and others
+    w.add(measured(problem=(128, 128), config={"tile": 256, "unroll": 2}))
+    w.add(measured(device="tpu-v5e", family="tpu-v5",
+                   config={"tile": 256, "unroll": 4}))
+    w.add(transferred(config={"tile": 1024, "unroll": 2}))
+    cfg, tier = w.select("tpu-v4", PROBLEM, "float32", DEFAULT)
+    assert (tier, cfg["tile"]) == ("transfer", 1024)
+    # remove the transferred record: scenario-distance fallback returns
+    cold = Wisdom(KERNEL, [r for r in w.records if not r.is_transferred()])
+    cfg, tier = cold.select("tpu-v4", PROBLEM, "float32", DEFAULT)
+    assert tier == "device+dtype"
+
+
+def test_low_confidence_transfer_is_ignored():
+    w = Wisdom(KERNEL)
+    w.add(measured(problem=(128, 128), config={"tile": 512, "unroll": 1}))
+    w.add(transferred(confidence=TRANSFER_MIN_CONFIDENCE - 0.01))
+    cfg, tier = w.select("tpu-v4", PROBLEM, "float32", DEFAULT)
+    assert tier == "device+dtype"
+    # the gate is tunable per call
+    cfg, tier = w.select("tpu-v4", PROBLEM, "float32", DEFAULT,
+                         min_transfer_confidence=0.1)
+    assert tier == "transfer"
+    # only-ineligible-transfers wisdom falls through to the default
+    only = Wisdom(KERNEL, [transferred(confidence=0.05)])
+    cfg, tier = only.select("tpu-v4", PROBLEM, "float32", DEFAULT)
+    assert (tier, cfg) == ("default", DEFAULT)
+
+
+def test_transfer_tier_requires_device_and_dtype_match():
+    w = Wisdom(KERNEL, [transferred(confidence=0.9)])
+    _, tier = w.select("tpu-v5e", PROBLEM, "float32", DEFAULT)
+    assert tier == "default"        # other device: prediction not for it
+    _, tier = w.select("tpu-v4", PROBLEM, "bfloat16", DEFAULT)
+    assert tier == "default"        # other dtype
+    _, tier = w.select("tpu-v4", (64, 64), "float32", DEFAULT)
+    assert tier == "transfer"       # same device+dtype, nearest problem
+
+
+def test_transfer_tier_is_a_tracked_miss():
+    assert "transfer" in MISS_TIERS
+
+
+# ------------------------------ merge semantics ------------------------------
+
+def test_measured_beats_transferred_in_merge_and_add():
+    t = transferred(score=1.0, confidence=0.99)
+    m = measured(score=500.0)
+    assert better_record(t, m) is m
+    assert better_record(m, t) is m
+    w = Wisdom(KERNEL, [m])
+    w.add(t)                        # keep_best: measurement survives
+    assert len(w) == 1 and not w.records[0].is_transferred()
+    # and the loser's provenance lands in the winner's lineage
+    assert any(e.get("source") == "transfer"
+               for e in w.records[0].lineage)
+    # two transferred records compete on score as usual
+    t2 = transferred(score=0.5, confidence=0.8,
+                     config={"tile": 512, "unroll": 4})
+    assert better_record(t, t2) is t2
+
+
+def test_merge_wisdom_promotes_measurement_over_transfer():
+    fleet = Wisdom(KERNEL, [transferred(score=10.0)])
+    local = Wisdom(KERNEL, [measured(score=80.0)])
+    merged = merge_wisdom(fleet, local)
+    assert len(merged) == 1
+    assert not merged.records[0].is_transferred()
+
+
+# ------------------------- predict -> verify -> promote ----------------------
+
+def _publish_transferred(transport, rec):
+    transport.publish(KERNEL, Wisdom(KERNEL, [rec]).to_doc())
+
+
+def test_coordinator_enqueues_verification_for_regressed_transfer():
+    transport = MemoryTransport()
+    bus = ControlBus(transport)
+    rec = transferred(score=50.0)
+    _publish_transferred(transport, rec)
+    coord = Coordinator(bus, n_shards=2, min_misses=2)
+    # within tolerance: no verification
+    publish_latency(bus, "h1", {KERNEL: {format_key(SCENARIO): 55.0}})
+    report = coord.tick()
+    assert report.verify == [] and report.planned == []
+    # regression: observed far above predicted -> job planned this tick
+    publish_latency(bus, "h1", {KERNEL: {format_key(SCENARIO): 90.0}})
+    report = coord.tick()
+    assert report.verify == [format_key(SCENARIO)]
+    assert len(report.planned) == 1
+
+
+def test_verify_loop_promotes_measured_record_end_to_end():
+    transport = MemoryTransport()
+    bus = ControlBus(transport)
+    _publish_transferred(transport, transferred(score=1.0))
+    coord = Coordinator(bus, n_shards=2, min_misses=2,
+                        max_evals_per_shard=50)
+    publish_latency(bus, "h1", {KERNEL: {format_key(SCENARIO): 900.0}})
+    assert len(coord.tick().planned) == 1
+    FleetWorker(bus, "w0", clock=ManualClock()).drain()
+    report = coord.tick()
+    assert len(report.assembled) == 1
+    records = [WisdomRecord.from_json(r)
+               for r in transport.fetch(KERNEL)["records"]]
+    mine = [r for r in records if r.scenario() == (SCENARIO[0], PROBLEM,
+                                                   "float32")]
+    assert len(mine) == 1
+    assert not mine[0].is_transferred()          # promoted: measured won
+    assert mine[0].provenance.get("source") == "fleet"
+    # the prediction survives as lineage, and the loop is now quiet
+    assert any(e.get("source") == "transfer" for e in mine[0].lineage)
+    assert coord.tick().verify == []
+
+
+# --------------------------- serve-path integration --------------------------
+
+def test_pull_sync_picks_up_transferred_wisdom(tmp_path):
+    transport = MemoryTransport()
+    rec = transferred(score=5.0, confidence=0.9)
+    _publish_transferred(transport, rec)
+    local = WisdomStore(tmp_path / "local")
+    PullSync(local, transport, interval=1).pull()
+    wisdom = local.load(KERNEL)
+    cfg, tier = wisdom.select("tpu-v4", PROBLEM, "float32", DEFAULT)
+    assert tier == "transfer" and cfg == rec.config
+
+
+# ----------------------------------- CLI -------------------------------------
+
+def test_cli_predict_score_export(tmp_path, capsys):
+    store = DatasetStore(tmp_path / "ds")
+    store.save(_source_dataset("tpu-v5e"))
+    store.save(_source_dataset("tpu-v4"))
+
+    rc = transfer_cli(["predict", "--dataset-dir", str(tmp_path / "ds"),
+                       "--target", "tpu-v4",
+                       "--wisdom-dir", str(tmp_path / "w")])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "tpu-v5e -> tpu-v4" in out and "merged 1 transferred" in out
+    wisdom = WisdomStore(tmp_path / "w").load(KERNEL)
+    assert len(wisdom) == 1 and wisdom.records[0].is_transferred()
+
+    src = store.path_for(KERNEL, "tpu-v5e", PROBLEM, "float32")
+    truth = store.path_for(KERNEL, "tpu-v4", PROBLEM, "float32")
+    rc = transfer_cli(["score", "--source", str(src), "--truth", str(truth),
+                       "--json", "--check"])
+    assert rc == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["transfer"]["fraction"] is not None
+    assert report["transfer"]["tier"] == "transfer"
+
+    out_path = tmp_path / "export.json"
+    rc = transfer_cli(["export", "--dataset-dir", str(tmp_path / "ds"),
+                       "--target", "tpu-v4", "--out", str(out_path)])
+    assert rc == 0
+    doc = json.loads(out_path.read_text())
+    assert doc["kernel"] == KERNEL
+    assert [r["provenance"]["source"] for r in doc["records"]] == ["transfer"]
+
+
+def test_cli_predict_rejects_dissimilar_target(tmp_path, capsys):
+    store = DatasetStore(tmp_path / "ds")
+    store.save(_source_dataset("tpu-v5e"))
+    rc = transfer_cli(["predict", "--dataset-dir", str(tmp_path / "ds"),
+                       "--target", "cpu"])
+    assert rc == 2                  # nothing eligible to serve
+    assert "SKIP" in capsys.readouterr().out
+
+
+# ------------------------- held-out benchmark (ISSUE 5) ----------------------
+
+def test_holdout_report_deterministic_and_gated():
+    src = _source_dataset("tpu-v4")
+    truth = _source_dataset("tpu-v5e")
+    r1 = holdout_report(src, truth)
+    r2 = holdout_report(src, truth)
+    assert json.dumps(r1, sort_keys=True) == json.dumps(r2, sort_keys=True)
+    assert r1["transfer"]["tier"] == "transfer"
+    assert r1["fallback"]["tier"] in ("device+dtype", "device",
+                                      "family+dtype", "family",
+                                      "any+dtype", "any")
+    assert r1["transfer"]["fraction"] >= 0.8
+
+
+def test_acceptance_benchmark_reaches_pinned_threshold():
+    """ISSUE 5 acceptance: the shipped held-out-device benchmark passes
+    its pinned >=0.80 fraction-of-optimum gate with transfer strictly
+    ahead of the cold fallback, and the report is byte-deterministic
+    (both asserted inside run())."""
+    from benchmarks.transfer_portability import THRESHOLD, build_report, run
+
+    rows = list(run())              # raises on any gate violation
+    assert len(rows) > 1
+    report = build_report()
+    assert report["pass"] and THRESHOLD == 0.80
+    for k in report["kernels"]:
+        assert k["mean_transfer_fraction"] >= THRESHOLD
+        assert k["mean_transfer_fraction"] > k["mean_fallback_fraction"]

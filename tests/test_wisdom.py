@@ -81,6 +81,26 @@ def test_same_device_selection_minimizes_distance(probs, query):
     assert cfg["i"] == best or dists[cfg["i"]] == dists[best]
 
 
+def test_equal_score_equal_distance_tie_breaks_deterministically():
+    """ISSUE 5 regression: two records at the same distance with the same
+    score must resolve to the same winner regardless of insertion order
+    (previously the first-inserted record won — merge order leaked into
+    serving behavior)."""
+    a = rec(problem=(128,), config={"c": "a"}, score=7.0)
+    b = rec(problem=(512,), config={"c": "b"}, score=7.0)
+    assert _distance((128,), (256,)) == _distance((512,), (256,))
+    expect = min((a, b), key=lambda r: r.record_id()).config
+    w_ab = Wisdom("k")
+    w_ab.add(a)
+    w_ab.add(b)
+    w_ba = Wisdom("k")
+    w_ba.add(b)
+    w_ba.add(a)
+    got_ab, _ = w_ab.select("tpu-v5e", (256,), "float32", {"c": "d"})
+    got_ba, _ = w_ba.select("tpu-v5e", (256,), "float32", {"c": "d"})
+    assert got_ab == got_ba == expect
+
+
 def test_distance_is_scale_normalized():
     """A small relative change on a huge axis must not drown out a large
     relative change on a small axis (the tier 2-4 regression)."""
