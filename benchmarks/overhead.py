@@ -1,13 +1,87 @@
 """Paper Fig 5: first-launch overhead breakdown (wisdom read / compile /
 launch) vs cached subsequent launches — measured for real on this host with
-the XLA JIT standing in for NVRTC."""
+the XLA JIT standing in for NVRTC.
+
+``--check`` runs the *instrumentation overhead gate* instead: the
+telemetry layer (repro.obs) sits directly on the launch hot path, which
+is only acceptable if the disabled path costs nothing measurable. The
+gate microbenchmarks one disabled instrument site (a ``metrics()``
+global read plus an ``is not None`` branch) against the pinned budget
+below and exits non-zero when it is blown — CI runs this on every
+change.
+"""
 
 from __future__ import annotations
+
+import time
+import timeit
 
 import numpy as np
 
 from repro.core import WisdomKernel, get_kernel
 from repro.tuner import tune_kernel
+
+#: Pinned gate: one *disabled* instrument site must cost at most this
+#: many nanoseconds (median of repeated timeit runs). The site is one
+#: function call + one branch — tens of ns on any current CPU; the
+#: budget leaves ~20x headroom for slow shared CI machines while still
+#: catching a disabled path that grew real work (dict building, label
+#: formatting, locking).
+DISABLED_SITE_BUDGET_NS = 2_000.0
+
+#: Sanity ceiling for one *enabled* counter increment (series-key build
+#: + dict lookup + float add). Not a hot-path guarantee — enabled mode
+#: is allowed to cost — just a guard against accidental O(n) work per
+#: event.
+ENABLED_SITE_BUDGET_NS = 60_000.0
+
+
+def _site_cost_ns(stmt: str, setup: str, number: int = 200_000,
+                  repeats: int = 7) -> float:
+    """Median per-iteration cost of ``stmt`` in nanoseconds."""
+    timer = timeit.Timer(stmt, setup=setup, timer=time.perf_counter)
+    runs = sorted(timer.repeat(repeat=repeats, number=number))
+    return runs[len(runs) // 2] / number * 1e9
+
+
+def measure() -> dict[str, float]:
+    """Per-site instrumentation costs (ns): disabled branch, enabled
+    counter inc, and the bare-loop floor for context."""
+    base = ("from repro.obs import runtime as obs\n"
+            "from repro.obs.metrics import MetricsRegistry\n")
+    disabled = _site_cost_ns(
+        "m = obs.metrics()\n"
+        "if m is not None:\n"
+        "    m.counter('launch.count', kernel='k').inc()",
+        base + "obs.disable()")
+    enabled = _site_cost_ns(
+        "m = obs.metrics()\n"
+        "if m is not None:\n"
+        "    m.counter('launch.count', kernel='k').inc()",
+        base + "obs.disable(); obs.enable(trace=False)")
+    floor = _site_cost_ns("pass", base)
+    return {"disabled_site_ns": disabled, "enabled_site_ns": enabled,
+            "loop_floor_ns": floor}
+
+
+def check() -> int:
+    """The CI gate: measure, print, and fail on a blown budget."""
+    costs = measure()
+    print(f"disabled instrument site: {costs['disabled_site_ns']:.1f} ns "
+          f"(budget {DISABLED_SITE_BUDGET_NS:.0f} ns)")
+    print(f"enabled counter inc:      {costs['enabled_site_ns']:.1f} ns "
+          f"(budget {ENABLED_SITE_BUDGET_NS:.0f} ns)")
+    print(f"bare loop floor:          {costs['loop_floor_ns']:.1f} ns")
+    failures = []
+    if costs["disabled_site_ns"] > DISABLED_SITE_BUDGET_NS:
+        failures.append("disabled-site budget blown")
+    if costs["enabled_site_ns"] > ENABLED_SITE_BUDGET_NS:
+        failures.append("enabled-site budget blown")
+    if failures:
+        print("FAIL: " + "; ".join(failures))
+        return 1
+    print("OK: instrumentation overhead within pinned bounds")
+    return 0
 
 
 def run() -> list[str]:
@@ -39,4 +113,14 @@ def run() -> list[str]:
                        + first.compile_s + first.launch_s)
         rows.append(f"overhead,advec_u,compile_fraction_of_first,"
                     f"{first.compile_s / total_first:.3f}")
+    for phase, ns in measure().items():
+        rows.append(f"overhead,obs,{phase},{ns / 1e9:.9f}")
     return rows
+
+
+if __name__ == "__main__":
+    import sys
+    if "--check" in sys.argv:
+        raise SystemExit(check())
+    for r in run():
+        print(r)

@@ -44,6 +44,13 @@ from typing import Any, Sequence
 import jax
 
 from .device import get_device
+from .scenario import SELECT_TIERS
+
+# The canonical tier names live in core/scenario.py (shared with the
+# online tracker's MISS_TIERS/HIT_TIERS and the observability report);
+# select() produces exactly these, in exactly this order.
+(T_EXACT, T_TRANSFER, T_DEVICE_DTYPE, T_DEVICE, T_FAMILY_DTYPE, T_FAMILY,
+ T_ANY_DTYPE, T_ANY, T_DEFAULT) = SELECT_TIERS
 
 #: Current on-disk schema version. v1: unversioned-or-``version: 1`` files
 #: without lineage; v2 adds per-record ``lineage`` (provenance history).
@@ -410,6 +417,10 @@ class Wisdom:
                min_transfer_confidence: float | None = None
                ) -> tuple[dict, str]:
         """Pick a config for a scenario. Returns (config, match_tier).
+        Thin wrapper over :meth:`select_record` for callers that only
+        need the config dict; callers that want the matched record
+        itself (its score, provenance, transfer confidence) use
+        ``select_record`` directly.
 
         Measured records go through the paper's §4.5 fuzzy tiers.
         *Transferred* records (cross-device predictions, see
@@ -423,6 +434,24 @@ class Wisdom:
         was at least calibrated for this hardware and ranks by problem
         distance within its tier), but it never shadows a real
         measurement for the exact scenario.
+        """
+        rec, tier = self.select_record(device_kind, problem_size, dtype,
+                                       min_transfer_confidence)
+        if rec is None:
+            return dict(default_config), tier
+        return dict(rec.config), tier
+
+    def select_record(self, device_kind: str, problem_size: Sequence[int],
+                      dtype: str,
+                      min_transfer_confidence: float | None = None
+                      ) -> tuple["WisdomRecord | None", str]:
+        """The §4.5 heuristic, returning the matched record itself.
+
+        Returns (record, tier); record is None only for the "default"
+        tier (empty/unusable wisdom), where the caller supplies its own
+        default configuration. This is the full-information form: the
+        telemetry layer reads the record's transfer confidence and score
+        off it, and ``select`` above reduces it to a config dict.
         """
         problem = tuple(int(x) for x in problem_size)
         family = get_device(device_kind).family
@@ -450,27 +479,27 @@ class Wisdom:
         exact = [r for r in measured
                  if r.device_kind == device_kind
                  and r.problem_size == problem and r.dtype == dtype]
-        tiers.append(("exact", exact))
-        tiers.append(("transfer", transferred))
+        tiers.append((T_EXACT, exact))
+        tiers.append((T_TRANSFER, transferred))
         same_dev = [r for r in measured
                     if r.device_kind == device_kind and r.dtype == dtype]
-        tiers.append(("device+dtype", same_dev))
+        tiers.append((T_DEVICE_DTYPE, same_dev))
         same_dev_any = [r for r in measured if r.device_kind == device_kind]
-        tiers.append(("device", same_dev_any))
+        tiers.append((T_DEVICE, same_dev_any))
         fam = [r for r in measured
                if r.device_family == family and r.dtype == dtype]
-        tiers.append(("family+dtype", fam))
+        tiers.append((T_FAMILY_DTYPE, fam))
         fam_any = [r for r in measured if r.device_family == family]
-        tiers.append(("family", fam_any))
+        tiers.append((T_FAMILY, fam_any))
         any_dtype = [r for r in measured if r.dtype == dtype]
-        tiers.append(("any+dtype", any_dtype))
-        tiers.append(("any", measured))
+        tiers.append((T_ANY_DTYPE, any_dtype))
+        tiers.append((T_ANY, measured))
 
         for tier_name, cands in tiers:
             rec = best(cands)
             if rec is not None:
-                return dict(rec.config), tier_name
-        return dict(default_config), "default"
+                return rec, tier_name
+        return None, T_DEFAULT
 
     def __len__(self) -> int:
         return len(self.records)

@@ -30,11 +30,15 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.obs import runtime as obs
+from repro.obs.metrics import UNIT_BUCKETS
+
 from .builder import ArgsMeta, KernelBuilder, args_meta
 from .capture import capture_requested, write_capture
 from .compile_cache import CompileCache, LaunchStats
 from .device import current_device_kind
 from .param import Config
+from .scenario import format_key
 from .wisdom import Wisdom
 
 
@@ -70,6 +74,11 @@ class WisdomKernel:
         self._selection_cache: dict[tuple, tuple[Config, str]] = {}
         self.compile_cache = CompileCache()
         self.stats: list[LaunchStats] = []
+        #: §4.5 match tier of every launch (traced ones included), tallied
+        #: so callers can read selection quality without observability
+        #: enabled; ``last_tier`` is the most recent launch's tier.
+        self.tier_counts: dict[str, int] = {}
+        self.last_tier: str | None = None
         self.online = None
         if online_requested():
             from repro.online import OnlineTuner  # deferred: avoids cycle
@@ -124,10 +133,28 @@ class WisdomKernel:
         if key in self._selection_cache:
             return self._selection_cache[key]
         wisdom = self._load_wisdom()
-        cfg, tier = wisdom.select(self.device_kind, problem, dtype,
-                                  self.builder.default_config())
+        rec, tier = wisdom.select_record(self.device_kind, problem, dtype)
+        cfg = (dict(rec.config) if rec is not None
+               else self.builder.default_config())
+        m = obs.metrics()
+        if m is not None and rec is not None and rec.is_transferred():
+            m.histogram("select.transfer_confidence", UNIT_BUCKETS,
+                        kernel=self.builder.name).observe(
+                            rec.transfer_confidence())
         self._selection_cache[key] = (cfg, tier)
         return cfg, tier
+
+    def _observe_selection(self, problem: tuple[int, ...], dtype: str,
+                           tier: str) -> None:
+        """Always-on tier tally + (when enabled) per-scenario metrics."""
+        self.tier_counts[tier] = self.tier_counts.get(tier, 0) + 1
+        self.last_tier = tier
+        m = obs.metrics()
+        if m is not None:
+            m.counter("select.tier", kernel=self.builder.name,
+                      scenario=format_key((self.device_kind, problem,
+                                           dtype)),
+                      tier=tier).inc()
 
     # -- launch ---------------------------------------------------------------
 
@@ -154,6 +181,7 @@ class WisdomKernel:
             if trial is not None:
                 config, tier = dict(trial), "trial"
         select_s = time.perf_counter() - t_sel0
+        self._observe_selection(problem, dtype, tier)
 
         fn = self._instantiate(config, meta, backend)
 
@@ -184,6 +212,36 @@ class WisdomKernel:
             wisdom_read_s=0.0 if cached else self._wisdom_read_s,
             select_s=select_s, compile_s=compile_s, launch_s=launch_s,
             tier=tier, config=dict(config)))
+        m = obs.metrics()
+        if m is not None:
+            name = self.builder.name
+            m.counter("launch.count", kernel=name).inc()
+            m.counter("compile.cache", kernel=name,
+                      outcome="hit" if cached else "miss").inc()
+            m.histogram("select.latency_us",
+                        kernel=name).observe(select_s * 1e6)
+            m.histogram("launch.latency_us",
+                        kernel=name).observe(launch_s * 1e6)
+            if not cached:
+                m.histogram("compile.latency_us",
+                            kernel=name).observe(compile_s * 1e6)
+        tr = obs.tracer()
+        if tr is not None:
+            # Record the finished launch as one complete event (the work
+            # already happened; re-running it under a context manager
+            # would distort the hot path). ts/dur reconstruct the span.
+            t_end = tr._now_us()
+            dur = round((select_s + compile_s + launch_s) * 1e6, 3)
+            tr.events.append({
+                "name": "launch", "cat": "kernel", "ph": "X",
+                "ts": round(t_end - dur, 3), "dur": dur,
+                "pid": tr.pid, "tid": tr._tid(),
+                "args": {"kernel": self.builder.name, "tier": tier,
+                         "scenario": format_key((self.device_kind,
+                                                 problem, dtype)),
+                         "cached": cached,
+                         "compile_us": round(compile_s * 1e6, 3),
+                         "launch_us": round(launch_s * 1e6, 3)}})
         if online is not None:
             online.after_launch(problem, dtype, config, tier, launch_s)
         return out

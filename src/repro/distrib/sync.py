@@ -29,6 +29,7 @@ from pathlib import Path
 from typing import Protocol
 
 from repro.core.wisdom import Wisdom, WisdomRecord, migrate_doc
+from repro.obs import runtime as obs
 
 from .merge import MergeReport, merge_wisdom
 from .store import CONTROL_PREFIX, WISDOM_SUFFIX, WisdomStore
@@ -147,6 +148,11 @@ class PushSync:
                                   _remote_wisdom(self.transport, name),
                                   report=report)
             self.transport.publish(name, merged.to_doc())
+        m = obs.metrics()
+        if m is not None:
+            m.counter("sync.ops", direction="push").inc()
+            m.counter("sync.records",
+                      direction="push").inc(report.records_out)
         return report
 
     def broadcast(self, kernel_name: str, record: WisdomRecord) -> None:
@@ -159,6 +165,10 @@ class PushSync:
         merged = merge_wisdom(Wisdom(kernel_name, [record]),
                               _remote_wisdom(self.transport, kernel_name))
         self.transport.publish(kernel_name, merged.to_doc())
+        m = obs.metrics()
+        if m is not None:
+            m.counter("sync.ops", direction="broadcast").inc()
+            m.counter("sync.records", direction="broadcast").inc()
 
 
 class PullSync:
@@ -212,6 +222,12 @@ class PullSync:
         for k in self.kernels:
             if k.builder.name in changed:
                 k.refresh_wisdom()
+        m = obs.metrics()
+        if m is not None:
+            m.counter("sync.ops", direction="pull").inc()
+            m.counter("sync.records",
+                      direction="pull").inc(report.records_out)
+            m.counter("sync.kernels_changed").inc(len(changed))
         return report
 
     def tick(self) -> MergeReport | None:
@@ -234,4 +250,7 @@ class PullSync:
         except Exception as e:  # noqa: BLE001 — serving must outlive sync
             self.failures += 1
             self.last_error = e
+            m = obs.metrics()
+            if m is not None:
+                m.counter("sync.failures", direction="pull").inc()
             return None

@@ -20,6 +20,8 @@ interruption*:
   merge engine, re-enqueue scenarios whose demand regresses;
 * :mod:`.local`       — :func:`run_local_fleet`: N in-process workers
   over a ``MemoryTransport``, the deterministic reference harness;
+* :mod:`.health`      — per-host metric snapshots on the ``metrics``
+  channel, merged into fleet-wide wisdom health (repro.obs);
 * :mod:`.cli`         — ``python -m repro.fleet``
   (plan / coordinate / work / status / demo).
 """
@@ -30,6 +32,9 @@ from .coordinator import (MIN_MISSES, TRANSFER_VERIFY_TOLERANCE, Coordinator,
 from .demand import (DemandEntry, ScenarioPriority, aggregate_demand,
                      aggregate_latency, predicted_speedup, prioritize,
                      publish_demand, publish_latency, seed_demand)
+from .health import (METRICS_CHANNEL, MetricsPublisher,
+                     aggregate_fleet_metrics, fleet_health, fleet_snapshots,
+                     publish_metrics)
 from .jobs import (LEASE_TTL_S, Lease, LeaseLost, TuningJob, claim_shard,
                    fetch_lease, heartbeat, job_id_for, lease_name,
                    list_jobs, release)
@@ -43,6 +48,8 @@ __all__ = [
     "DemandEntry", "ScenarioPriority", "aggregate_demand",
     "aggregate_latency", "predicted_speedup", "prioritize",
     "publish_demand", "publish_latency", "seed_demand",
+    "METRICS_CHANNEL", "MetricsPublisher", "aggregate_fleet_metrics",
+    "fleet_health", "fleet_snapshots", "publish_metrics",
     "LEASE_TTL_S", "Lease", "LeaseLost", "TuningJob", "claim_shard",
     "fetch_lease", "heartbeat", "job_id_for", "lease_name", "list_jobs",
     "release",

@@ -32,8 +32,11 @@ _SEP = "--"
 #: Channels the orchestrator uses (documentation; the bus accepts any
 #: filename-safe channel string). ``latency`` carries serving hosts'
 #: observed per-scenario latencies — the signal the coordinator checks
-#: transferred records' predictions against (repro.transfer).
-CHANNELS = ("demand", "job", "lease", "state", "result", "done", "latency")
+#: transferred records' predictions against (repro.transfer);
+#: ``metrics`` carries per-host observability snapshots
+#: (repro.fleet.health) the coordinator merges into fleet-wide health.
+CHANNELS = ("demand", "job", "lease", "state", "result", "done", "latency",
+            "metrics")
 
 
 def _check(kind: str, value: str) -> str:

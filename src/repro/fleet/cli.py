@@ -30,6 +30,7 @@ from repro.distrib.sync import DirectoryTransport
 from .bus import ControlBus
 from .coordinator import MIN_MISSES, Coordinator
 from .demand import aggregate_demand, prioritize
+from .health import MetricsPublisher, fleet_snapshots
 from .jobs import LEASE_TTL_S, fetch_lease, lease_name, list_jobs
 from .local import run_local_fleet
 from .worker import FleetWorker
@@ -117,7 +118,14 @@ def _cmd_work(args) -> int:
             if bus.fetch("done", j.job_id) is None
             for s in j.shard_ids())
 
+    # When observability is enabled (KERNEL_LAUNCHER_OBS=1 or
+    # repro.obs.enable()), every drain publishes this worker's metrics
+    # snapshot onto the control bus so any host can render fleet-wide
+    # health with ``python -m repro.obs report --bus DIR``. A no-op
+    # while disabled.
+    publisher = MetricsPublisher(bus, args.worker_id, interval=1)
     n = worker.drain(max_shards=args.max_shards)
+    publisher.tick()
     while args.poll is not None:
         if args.max_shards is not None and n >= args.max_shards:
             break
@@ -126,6 +134,7 @@ def _cmd_work(args) -> int:
         time.sleep(args.poll)
         n += worker.drain(max_shards=(None if args.max_shards is None
                                       else args.max_shards - n))
+        publisher.tick()
     print(f"{args.worker_id}: finished {n} shard(s), "
           f"{worker.evals_run} evaluation(s)")
     for name in worker.shards_done:
@@ -156,6 +165,11 @@ def _cmd_status(args) -> int:
         tail = (f" -> {done['state']}" if done else "")
         print(f"  job {job.job_id} {job.kernel} "
               f"[{' '.join(states)}]{tail}")
+    snaps = fleet_snapshots(bus)
+    if snaps:
+        print(f"  {len(snaps)} metrics snapshot(s) on the bus from "
+              f"{', '.join(sorted(snaps))} "
+              f"(render: python -m repro.obs report --bus {args.dir})")
     return 0
 
 

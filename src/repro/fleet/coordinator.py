@@ -31,6 +31,7 @@ from repro.core.wisdom import (Wisdom, WisdomRecord, make_fleet_provenance)
 from repro.distrib.merge import better_record, merge_wisdom
 from repro.distrib.store import CONTROL_PREFIX, WisdomStore
 from repro.distrib.sync import transport_wisdom
+from repro.obs import runtime as obs_runtime
 from repro.online.tracker import format_key
 
 from .bus import ControlBus
@@ -107,6 +108,10 @@ class Coordinator:
         self.min_misses = min_misses
         self.speedup_probes = speedup_probes
         self.seed = seed
+        #: Coordination rounds run so far; with no wall clock anywhere in
+        #: the coordinator, assembled-wisdom age is expressed in rounds.
+        self.rounds = 0
+        self._last_assembled_round: int | None = None
 
     # -- planning --------------------------------------------------------------
 
@@ -308,9 +313,36 @@ class Coordinator:
         self.assemble(report)
         self.check_transfers(report)
         self.plan(report)
+        self.rounds += 1
+        if report.assembled:
+            self._last_assembled_round = self.rounds
+        m = obs_runtime.metrics()
+        if m is not None:
+            for event, ids in (("planned", report.planned),
+                               ("assembled", report.assembled),
+                               ("requeued", report.requeued),
+                               ("verify", report.verify)):
+                if ids:
+                    m.counter("fleet.jobs", event=event).inc(len(ids))
+            m.gauge("fleet.rounds").set(self.rounds)
+            # Rounds since fleet wisdom last changed: fresh wisdom is
+            # age 0; "never assembled anything" reads as age == rounds.
+            age = (self.rounds - self._last_assembled_round
+                   if self._last_assembled_round is not None
+                   else self.rounds)
+            m.gauge("fleet.assembled_age_rounds").set(age)
         return report
 
     # -- introspection ---------------------------------------------------------
+
+    def fleet_health(self, top: int = 10) -> str:
+        """The wisdom-health report over every snapshot workers have
+        published on the ``metrics`` channel (see
+        :mod:`repro.fleet.health`). Example: ``print(coord.fleet_health())``
+        after a few ticks shows fleet-wide hit rates and missing
+        scenarios."""
+        from .health import fleet_health
+        return fleet_health(self.bus, top=top)
 
     def status(self) -> dict:
         demand = aggregate_demand(self.bus)

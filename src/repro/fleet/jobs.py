@@ -25,6 +25,7 @@ from __future__ import annotations
 import hashlib
 from dataclasses import dataclass
 
+from repro.obs import runtime as obs
 from repro.online.tracker import ScenarioKey, format_key, parse_key
 
 from .bus import Clock, ControlBus
@@ -32,6 +33,12 @@ from .bus import Clock, ControlBus
 #: Default lease time-to-live. Workers heartbeat at every checkpoint, so
 #: this only bounds how long a crashed worker's shard stays stuck.
 LEASE_TTL_S = 60.0
+
+
+def _lease_event(event: str, worker: str) -> None:
+    m = obs.metrics()
+    if m is not None:
+        m.counter("fleet.lease", event=event, worker=worker).inc()
 
 
 @dataclass
@@ -206,6 +213,7 @@ def fetch_lease(bus: ControlBus, job_id: str, shard_id: str) -> Lease | None:
 def _verify_owned(bus: ControlBus, lease: Lease) -> None:
     cur = fetch_lease(bus, lease.job_id, lease.shard_id)
     if cur is None or cur.nonce != lease.nonce:
+        _lease_event("lost", lease.worker)
         raise LeaseLost(
             f"{lease.worker} no longer holds "
             f"{lease_name(lease.job_id, lease.shard_id)} "
@@ -244,7 +252,9 @@ def claim_shard(bus: ControlBus, job: TuningJob, shard_id: str,
     check = fetch_lease(bus, job.job_id, shard_id)
     if check is not None and check.nonce == lease.nonce \
             and check.worker == worker_id:
+        _lease_event("reclaim" if claims > 1 else "acquire", worker_id)
         return check
+    _lease_event("race_lost", worker_id)
     return None                 # lost the last-writer-wins race
 
 
@@ -265,6 +275,7 @@ def heartbeat(bus: ControlBus, lease: Lease, clock: Clock,
     lease.expires_at = clock.now() + ttl_s
     bus.publish("lease", lease_name(lease.job_id, lease.shard_id),
                 lease.to_json())
+    _lease_event("heartbeat", lease.worker)
     return lease
 
 
@@ -285,3 +296,4 @@ def release(bus: ControlBus, lease: Lease) -> None:
     lease.state = "done"
     bus.publish("lease", lease_name(lease.job_id, lease.shard_id),
                 lease.to_json())
+    _lease_event("release", lease.worker)

@@ -31,6 +31,7 @@ import numpy as np
 from repro.core.device import get_device
 from repro.core.param import Config
 from repro.core.registry import get_kernel
+from repro.obs import runtime as obs
 from repro.tuner.costmodel import INFEASIBLE
 from repro.tuner.runner import CostModelEvaluator, EvalResult
 from repro.tuner.strategies import (STRATEGIES, Evaluation, TuningResult,
@@ -115,12 +116,23 @@ class FleetWorker:
                                     self.worker_id, self.clock, self.ttl_s)
                 if lease is None:
                     continue
+                tr = obs.tracer()
                 try:
-                    self._run_shard(job, shard_id, lease)
+                    if tr is not None:
+                        with tr.span("fleet.shard", cat="fleet",
+                                     job=job.job_id, shard=shard_id,
+                                     worker=self.worker_id):
+                            self._run_shard(job, shard_id, lease)
+                    else:
+                        self._run_shard(job, shard_id, lease)
                 except LeaseLost:
                     continue            # reclaimed under us: theirs now
                 name = lease_name(job.job_id, shard_id)
                 self.shards_done.append(name)
+                m = obs.metrics()
+                if m is not None:
+                    m.counter("fleet.shards_done",
+                              worker=self.worker_id).inc()
                 return name
         return None
 
@@ -189,6 +201,10 @@ class FleetWorker:
                                   error=r.error))
             live += 1
             self.evals_run += 1
+            m = obs.metrics()
+            if m is not None:
+                m.counter("fleet.shard_evals",
+                          worker=self.worker_id).inc()
             if (self.crash_after_evals is not None
                     and live >= self.crash_after_evals):
                 self.crash_after_evals = None

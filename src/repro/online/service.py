@@ -38,6 +38,7 @@ from repro.core.builder import ArgsMeta
 from repro.core.device import get_device
 from repro.core.param import Config
 from repro.core.wisdom_kernel import online_requested  # noqa: F401 (re-export)
+from repro.obs import runtime as obs
 from repro.tuner.runner import CostModelEvaluator
 
 from .budget import BudgetTimer, OverheadBudget, OverheadMeter
@@ -161,6 +162,10 @@ class OnlineTuner:
                 return None
             state.pending_trial = cand
             st.trials += 1
+            m = obs.metrics()
+            if m is not None:
+                m.counter("online.trials",
+                          kernel=self.kernel.builder.name).inc()
             return cand
         finally:
             self.meter.end()
@@ -184,7 +189,9 @@ class OnlineTuner:
             timer = BudgetTimer(self.budget)
             screens = state.scheduler.screen(timer)
             self._maybe_promote(state)
+        before_s = self.meter.overhead_s
         self.meter.end(screens=screens, trial=trial, launch=True)
+        self._observe_spend(self.meter.overhead_s - before_s, screens)
 
     def observe_traced(self, problem: tuple[int, ...], dtype: str,
                        meta: ArgsMeta, config: Config, tier: str) -> None:
@@ -234,10 +241,22 @@ class OnlineTuner:
                         cand, state.evaluator(cand).score_us)
                     screens += 1
             self._maybe_promote(state)
+        before_s = self.meter.overhead_s
         self.meter.end(screens=screens)
+        self._observe_spend(self.meter.overhead_s - before_s, screens)
         return screens
 
     # -- internals -------------------------------------------------------------
+
+    def _observe_spend(self, spent_s: float, screens: int) -> None:
+        """Report this slice of background-tuning budget to telemetry."""
+        m = obs.metrics()
+        if m is None:
+            return
+        name = self.kernel.builder.name
+        m.counter("online.overhead_us", kernel=name).inc(spent_s * 1e6)
+        if screens:
+            m.counter("online.screens", kernel=name).inc(screens)
 
     def _activate(self, key: ScenarioKey, meta: ArgsMeta,
                   incumbent: Config) -> _ScenarioState:
@@ -264,6 +283,20 @@ class OnlineTuner:
             return launch_s * 1e6
         return state.evaluator(config).score_us
 
+    def _promotion_outcome(self, state: _ScenarioState,
+                           outcome: str) -> None:
+        m = obs.metrics()
+        if m is not None:
+            m.counter("online.promotions",
+                      kernel=self.kernel.builder.name,
+                      outcome=outcome).inc()
+        tr = obs.tracer()
+        if tr is not None:
+            from repro.core.scenario import format_key
+            tr.instant("online." + outcome, cat="online",
+                       kernel=self.kernel.builder.name,
+                       scenario=format_key(state.key))
+
     def _maybe_promote(self, state: _ScenarioState) -> None:
         if state.scheduler.bracket_dead:
             # screening found nothing feasible: stop spending on this
@@ -271,6 +304,7 @@ class OnlineTuner:
             state.finished = True
             self.events.append(("no-candidates", state.key,
                                 dict(state.incumbent_config)))
+            self._promotion_outcome(state, "no-candidates")
             return
         won = state.scheduler.winner()
         if won is None:
@@ -289,9 +323,11 @@ class OnlineTuner:
         if promo is not None:
             state.promotion = promo
             self.events.append(("promote", state.key, promo))
+            self._promotion_outcome(state, "promoted")
         else:
             self.events.append(("keep-incumbent", state.key,
                                 dict(state.incumbent_config)))
+            self._promotion_outcome(state, "kept")
 
     # -- introspection ---------------------------------------------------------
 

@@ -17,53 +17,13 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-ScenarioKey = tuple[str, tuple[int, ...], str]   # (device_kind, problem, dtype)
-
-#: Separator for the canonical string form of a ScenarioKey. Device kinds
-#: and dtypes never contain it (enforced by ``format_key``).
-_KEY_SEP = "|"
-
-
-def format_key(key: ScenarioKey) -> str:
-    """Canonical, round-trippable string form of a scenario key.
-
-    ``("tpu-v5e", (256, 256), "float32")`` -> ``"tpu-v5e|256x256|float32"``.
-    The tuple form does not survive JSON (tuples come back as lists, and
-    dict keys cannot be tuples at all), so everything that moves demand
-    records across a transport keys them by this string instead.
-    """
-    device_kind, problem, dtype = key
-    device_kind, dtype = str(device_kind), str(dtype)
-    for part in (device_kind, dtype):
-        if _KEY_SEP in part:
-            raise ValueError(f"scenario component {part!r} contains "
-                             f"{_KEY_SEP!r}")
-    dims = "x".join(str(int(d)) for d in problem)
-    return _KEY_SEP.join((device_kind, dims, dtype))
-
-
-def parse_key(s: str) -> ScenarioKey:
-    """Inverse of :func:`format_key` (hashable tuples, ints restored)."""
-    parts = s.split(_KEY_SEP)
-    if len(parts) != 3:
-        raise ValueError(f"malformed scenario key {s!r}")
-    device_kind, dims, dtype = parts
-    problem = tuple(int(d) for d in dims.split("x")) if dims else ()
-    return (device_kind, problem, dtype)
-
-#: Selection tiers that count as wisdom misses (paper §4.5 tiers 2-5: any
-#: fuzzy device/size/dtype match, and the empty-wisdom default). The
-#: "transfer" tier counts too: a transferred record serves traffic well,
-#: but it is a *prediction* — demand must keep flowing so the fleet
-#: verification loop eventually replaces it with a measurement.
-MISS_TIERS = frozenset({
-    "transfer", "device+dtype", "device", "family+dtype", "family",
-    "any+dtype", "any", "default",
-})
-
-#: Tiers that are *not* tuning demand: an exact record already exists, the
-#: caller forced a config, or the launch was an online trial itself.
-HIT_TIERS = frozenset({"exact", "forced", "trial"})
+# Canonical scenario-key and tier vocabulary. Defined once in
+# core/scenario.py (shared with Wisdom.select and the observability
+# report); re-exported here because the fleet/demand/transfer layers
+# have always imported them from this module.
+from repro.core.scenario import (HIT_TIERS, MISS_TIERS,  # noqa: F401
+                                 SELECT_TIERS, ScenarioKey, format_key,
+                                 parse_key)
 
 
 @dataclass

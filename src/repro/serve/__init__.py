@@ -1,4 +1,4 @@
-from .engine import ServeEngine, Request
+from .engine import ServeEngine, ServeReport, Request
 from .batching import ContinuousBatcher
 
-__all__ = ["ServeEngine", "Request", "ContinuousBatcher"]
+__all__ = ["ServeEngine", "ServeReport", "Request", "ContinuousBatcher"]

@@ -21,6 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import runtime as obs
+from repro.obs.metrics import COUNT_BUCKETS
+
 from .batching import ContinuousBatcher
 
 
@@ -30,6 +33,51 @@ class Request:
     prompt: np.ndarray            # (prompt_len,) int32
     max_new_tokens: int = 16
     tokens: list = field(default_factory=list)   # generated
+
+
+@dataclass
+class ServeReport:
+    """What one :meth:`ServeEngine.run` call did.
+
+    Mapping-compatible with the historical ``{request_id: tokens}``
+    return value (``report[rid]``, iteration, ``len``, ``in`` all
+    delegate to :attr:`outputs`), so existing callers keep working while
+    new ones read the run stats directly.
+    """
+
+    outputs: dict[int, list[int]]
+    cohorts: int = 0
+    requests_completed: int = 0
+    steps: int = 0
+    sync_pulls: int = 0
+    sync_failures: int = 0
+
+    def __getitem__(self, request_id: int) -> list[int]:
+        return self.outputs[request_id]
+
+    def __iter__(self):
+        return iter(self.outputs)
+
+    def __len__(self) -> int:
+        return len(self.outputs)
+
+    def __contains__(self, request_id: int) -> bool:
+        return request_id in self.outputs
+
+    def keys(self):
+        return self.outputs.keys()
+
+    def values(self):
+        return self.outputs.values()
+
+    def items(self):
+        return self.outputs.items()
+
+    def to_json(self) -> dict:
+        return {"cohorts": self.cohorts,
+                "requests_completed": self.requests_completed,
+                "steps": self.steps, "sync_pulls": self.sync_pulls,
+                "sync_failures": self.sync_failures}
 
 
 class ServeEngine:
@@ -96,10 +144,22 @@ class ServeEngine:
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(next_tok))
             self.steps_run += 1
+            m = obs.metrics()
+            if m is not None:
+                m.counter("serve.decode_steps").inc()
             for svc in self.online:
                 svc.tick()
             if self.sync is not None:
-                self.sync.tick()
+                fails_before = self.sync.failures
+                pulled = self.sync.tick()
+                if m is not None:
+                    if pulled is not None:
+                        outcome = "pulled"
+                    elif self.sync.failures > fails_before:
+                        outcome = "failed"
+                    else:
+                        outcome = "skipped"
+                    m.counter("serve.sync_tick", outcome=outcome).inc()
             sampled = self._sample(np.asarray(logits[:, 0]))
             for slot, req in reqs.items():
                 if done[slot]:
@@ -118,12 +178,41 @@ class ServeEngine:
             self.batcher.finished.append(rid)
             s.active = False
             s.request_id = None
+        m = obs.metrics()
+        if m is not None:
+            m.counter("serve.requests_completed").inc(len(members))
 
-    def run(self, max_cohorts: int = 1000) -> dict[int, list[int]]:
+    def run(self, max_cohorts: int = 1000) -> ServeReport:
+        steps0 = self.steps_run
+        done0 = len(self.batcher.finished)
+        pulls0 = self.sync.pulls if self.sync is not None else 0
+        fails0 = self.sync.failures if self.sync is not None else 0
+        cohorts = 0
         for _ in range(max_cohorts):
             if self.batcher.done():
                 break
             members = self.batcher.admit()
-            if members:
+            if not members:
+                continue
+            m = obs.metrics()
+            if m is not None:
+                m.histogram("serve.cohort_size",
+                            COUNT_BUCKETS).observe(len(members))
+                m.gauge("serve.queue_depth").set(len(self.batcher.queue))
+            tr = obs.tracer()
+            if tr is not None:
+                with tr.span("serve.cohort", cat="serve",
+                             cohort=cohorts, size=len(members)):
+                    self._run_cohort(members)
+            else:
                 self._run_cohort(members)
-        return {rid: r.tokens for rid, r in self._requests.items()}
+            cohorts += 1
+        return ServeReport(
+            outputs={rid: r.tokens for rid, r in self._requests.items()},
+            cohorts=cohorts,
+            requests_completed=len(self.batcher.finished) - done0,
+            steps=self.steps_run - steps0,
+            sync_pulls=(self.sync.pulls - pulls0
+                        if self.sync is not None else 0),
+            sync_failures=(self.sync.failures - fails0
+                           if self.sync is not None else 0))
