@@ -19,11 +19,27 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .param import Config, ConfigSpace
 from .workload import Workload
 
 ArgsMeta = tuple  # tuple[jax.ShapeDtypeStruct, ...]
+
+
+def probe_array(rng: np.random.Generator, shape: Sequence[int], dtype: str,
+                scale: float = 1.0) -> np.ndarray:
+    """Deterministic random array for a kernel's ``probe`` hook.
+
+    Draws standard-normal values from ``rng`` and casts through jnp so
+    non-numpy dtypes (``bfloat16``) work on any host. Probe hooks exist
+    so the correctness oracle can synthesize concrete arguments for a
+    scenario that was never captured (``problem_size`` is not
+    invertible); seeding ``rng`` per scenario keeps the check
+    reproducible everywhere.
+    """
+    x = rng.standard_normal(tuple(int(d) for d in shape)) * scale
+    return np.asarray(jnp.asarray(x).astype(dtype))
 
 
 def args_meta(*args) -> ArgsMeta:
@@ -51,6 +67,7 @@ class KernelBuilder:
         self._reference: Callable | None = None
         self._problem_size: Callable[..., tuple[int, ...]] | None = None
         self._workload: Callable[[Config, tuple, str], Workload] | None = None
+        self._probe: Callable[[tuple[int, ...], str], Sequence] | None = None
 
     # -- space construction (chainable, like the C++ API) --------------------
 
@@ -88,6 +105,17 @@ class KernelBuilder:
         self._workload = fn
         return fn
 
+    def probe(self, fn: Callable[[tuple[int, ...], str], Sequence]):
+        """fn(problem, dtype) -> concrete argument arrays for the scenario.
+
+        The inverse of ``problem_size`` the correctness oracle needs: a
+        promotion gate only knows (problem, dtype), not the original
+        captured arguments, so the probe synthesizes deterministic
+        inputs (use :func:`probe_array` with a fixed seed) that the
+        built kernel and the reference are both run on."""
+        self._probe = fn
+        return fn
+
     # -- accessors ------------------------------------------------------------
 
     def get_problem_size(self, *args) -> tuple[int, ...]:
@@ -119,6 +147,22 @@ class KernelBuilder:
         if self._workload is None:
             raise ValueError(f"kernel {self.name!r} has no workload fn")
         return self._workload(dict(config), tuple(problem), dtype)
+
+    def has_probe(self) -> bool:
+        """Whether this kernel can synthesize oracle-check arguments."""
+        return self._probe is not None
+
+    def make_probe_args(self, problem: tuple[int, ...],
+                        dtype: str) -> list[np.ndarray]:
+        """Deterministic concrete arguments for (problem, dtype) — what
+        the correctness oracle feeds both the built kernel and the
+        reference. Raises ``ValueError`` when the kernel registered no
+        probe hook (the caller should treat the config as unverifiable
+        rather than guessing argument shapes)."""
+        if self._probe is None:
+            raise ValueError(f"kernel {self.name!r} has no probe fn")
+        args = self._probe(tuple(int(x) for x in problem), str(dtype))
+        return [np.asarray(a) for a in args]
 
     def default_config(self) -> Config:
         return self.space.default_config()

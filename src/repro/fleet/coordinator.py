@@ -33,6 +33,7 @@ from repro.distrib.store import CONTROL_PREFIX, WisdomStore
 from repro.distrib.sync import transport_wisdom
 from repro.obs import runtime as obs_runtime
 from repro.online.tracker import format_key
+from repro.sandbox.gate import OracleGate
 
 from .bus import ControlBus
 from .demand import (aggregate_demand, aggregate_latency, prioritize,
@@ -99,7 +100,7 @@ class Coordinator:
     def __init__(self, bus: ControlBus, store: WisdomStore | None = None,
                  n_shards: int = 4, max_evals_per_shard: int = 200,
                  strategy: str = "exhaustive", min_misses: int = MIN_MISSES,
-                 speedup_probes: int = 16, seed: int = 0):
+                 speedup_probes: int = 16, seed: int = 0, oracle="auto"):
         self.bus = bus
         self.store = store
         self.n_shards = n_shards
@@ -108,6 +109,11 @@ class Coordinator:
         self.min_misses = min_misses
         self.speedup_probes = speedup_probes
         self.seed = seed
+        #: Correctness gate on shard winners: a winner that fails its
+        #: reference check never enters fleet wisdom — assembly falls
+        #: back to the next-best shard result instead. ``"auto"`` = a
+        #: default :class:`OracleGate`; None disables gating.
+        self.oracle = OracleGate() if oracle == "auto" else oracle
         #: Coordination rounds run so far; with no wall clock anywhere in
         #: the coordinator, assembled-wisdom age is expressed in rounds.
         self.rounds = 0
@@ -202,7 +208,7 @@ class Coordinator:
                 results.append(doc)
             if len(results) < job.n_shards:
                 continue            # still tuning
-            record = self._assemble_job(job, results)
+            record, rejected = self._assemble_job(job, results)
             done = {"job": job.job_id, "misses_at_plan": job.misses,
                     "round": job.round_}
             if record is None:
@@ -212,31 +218,64 @@ class Coordinator:
                 done["score_us"] = record.score_us
                 done["config"] = dict(record.config)
                 records.append(record)
+            if rejected:
+                done["rejected"] = rejected
             self.bus.publish("done", job.job_id, done)
             report.assembled.append(job.job_id)
         return records
 
-    def _assemble_job(self, job: TuningJob,
-                      results: list[dict]) -> WisdomRecord | None:
+    def _assemble_job(self, job: TuningJob, results: list[dict]
+                      ) -> tuple[WisdomRecord | None, list[dict]]:
         total_evals = sum(int(r.get("evals", 0)) for r in results)
         dev = get_device(job.device_kind)
         provenance = make_fleet_provenance(
             strategy=job.strategy, evals=total_evals,
             objective="costmodel", job_id=job.job_id,
             n_shards=job.n_shards, round_=job.round_)
-        winner: WisdomRecord | None = None
+        candidates: list[WisdomRecord] = []
         for r in results:
             if r.get("best_config") is None:
                 continue
-            cand = WisdomRecord(
+            candidates.append(WisdomRecord(
                 device_kind=dev.kind, device_family=dev.family,
                 problem_size=tuple(job.problem), dtype=job.dtype,
                 config=dict(r["best_config"]),
                 score_us=float(r["best_score_us"]),
-                provenance=dict(provenance))
-            winner = cand if winner is None else better_record(winner, cand)
+                provenance=dict(provenance)))
+        # Walk shard winners best-first through the correctness gate: a
+        # shard whose "winner" computes the wrong answer (crashed tuner,
+        # cost-model blind spot) is recorded in the done doc and the
+        # next-best shard result takes its place.
+        winner: WisdomRecord | None = None
+        rejected: list[dict] = []
+        while candidates:
+            best_i = 0
+            for i in range(1, len(candidates)):
+                if better_record(candidates[best_i],
+                                 candidates[i]) is candidates[i]:
+                    best_i = i
+            cand = candidates.pop(best_i)
+            if self.oracle is None:
+                winner = cand
+                break
+            verdict = self.oracle.check_record(job.kernel, cand)
+            if self.oracle.allows(verdict):
+                stamped = self.oracle.stamp(cand.provenance, job.kernel,
+                                            verdict)
+                winner = (cand if stamped == cand.provenance else
+                          WisdomRecord(
+                              device_kind=cand.device_kind,
+                              device_family=cand.device_family,
+                              problem_size=cand.problem_size,
+                              dtype=cand.dtype, config=dict(cand.config),
+                              score_us=cand.score_us, provenance=stamped))
+                break
+            rejected.append({"config": dict(cand.config),
+                             "score_us": cand.score_us,
+                             "verdict": verdict.to_json()})
         if winner is None:
-            return None             # every shard came back infeasible
+            # every shard came back infeasible, or the oracle vetoed all
+            return None, rejected
         # Shard winners flow through the merge engine into fleet wisdom:
         # fetch-merge-publish, so a better record already on the transport
         # (another job round, an online promotion) survives.
@@ -247,7 +286,7 @@ class Coordinator:
         if self.store is not None:
             self.store.save(merge_wisdom(self.store.load(job.kernel),
                                          merged))
-        return winner
+        return winner, rejected
 
     # -- transfer verification -------------------------------------------------
 

@@ -32,6 +32,7 @@ from repro.core.device import get_device
 from repro.core.param import Config
 from repro.core.registry import get_kernel
 from repro.obs import runtime as obs
+from repro.sandbox.evaluator import SandboxedEvaluator, SandboxSettings
 from repro.tuner.costmodel import INFEASIBLE
 from repro.tuner.runner import CostModelEvaluator, EvalResult
 from repro.tuner.strategies import (STRATEGIES, Evaluation, TuningResult,
@@ -78,7 +79,8 @@ class FleetWorker:
                  clock: Clock | None = None, ttl_s: float = LEASE_TTL_S,
                  checkpoint_every: int = 8,
                  crash_after_evals: int | None = None,
-                 datasets=None):
+                 datasets=None, evaluator_factory=None,
+                 sandbox: SandboxSettings | None = None):
         self.bus = bus
         self.worker_id = worker_id
         self.clock = clock or WallClock()
@@ -90,6 +92,17 @@ class FleetWorker:
         #: Optional repro.tunebench DatasetStore: recorded spaces
         #: warm-start shard sessions (replayed, never re-measured).
         self.datasets = datasets
+        #: Optional ``(builder, job) -> Evaluate`` override; default is a
+        #: CostModelEvaluator for the job's scenario. Fault-injection
+        #: tests swap in misbehaving evaluators here.
+        self.evaluator_factory = evaluator_factory
+        #: Crash-isolation settings for shard evaluations. Default is
+        #: the inline sandbox (verdict classification without a child
+        #: process — the cost model cannot hang); pass fork
+        #: SandboxSettings when the evaluator itself might hang or
+        #: take the worker process down.
+        self.sandbox = sandbox if sandbox is not None else SandboxSettings(
+            method="inline")
         self.shards_done: list[str] = []
         self.evals_run = 0
 
@@ -153,9 +166,18 @@ class FleetWorker:
         builder = get_kernel(job.kernel)
         index = job.shard_index(shard_id)
         space = builder.space.shard(index, job.n_shards)
-        evaluator = CostModelEvaluator(builder, job.problem, job.dtype,
-                                       get_device(job.device_kind),
-                                       verify="none")
+        if self.evaluator_factory is not None:
+            base = self.evaluator_factory(builder, job)
+        else:
+            base = CostModelEvaluator(builder, job.problem, job.dtype,
+                                      get_device(job.device_kind),
+                                      verify="none")
+        # Every shard evaluation runs through the sandbox: a candidate
+        # that hangs/crashes/raises becomes an infeasible result with a
+        # ``sandbox:<verdict>`` error — checkpointed like any other
+        # evaluation — instead of killing the worker (and stalling the
+        # shard a full lease TTL).
+        evaluator = SandboxedEvaluator(base, self.sandbox)
         # Resume: a previous (crashed) holder's checkpointed evaluations.
         state = self.bus.fetch("state", name)
         history = [evaluation_from_json(e)

@@ -15,7 +15,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+import numpy as np
+
 from repro.core import KernelBuilder, Workload, register
+from repro.core.builder import probe_array
 
 from . import ref as _ref
 from ._stencil_common import (FieldView, HALO_BLK, check_blocks, field_specs,
@@ -141,6 +144,17 @@ def _build(config, problem, meta, interpret: bool = False):
 
 
 builder.reference(_ref.diff_uvw_ref)
+
+
+@builder.probe
+def _probe(problem, dtype):
+    rng = np.random.default_rng(0)
+    u, v, w = (probe_array(rng, problem, dtype) for _ in range(3))
+    # eddy viscosity is physically nonnegative
+    evisc = np.abs(probe_array(rng, problem, dtype)) + np.asarray(
+        0.1, dtype=u.dtype)
+    scal = np.array([[1.1, 0.9, 1.3, 0.0]], np.float32)
+    return u, v, w, evisc, scal
 
 
 @builder.workload

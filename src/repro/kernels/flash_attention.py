@@ -18,9 +18,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import KernelBuilder, Workload, register
+from repro.core.builder import probe_array
 
 from . import ref as _ref
 
@@ -135,6 +137,15 @@ def _make_builder(causal: bool) -> KernelBuilder:
         return call
 
     b.reference(_ref.flash_attention_ref_factory(causal))
+
+    @b.probe
+    def _probe(problem, dtype):
+        BH, BHkv, S, D = problem
+        rng = np.random.default_rng(0)
+        scale = 1.0 / (D ** 0.5)
+        return (probe_array(rng, (BH, S, D), dtype, scale),
+                probe_array(rng, (BHkv, S, D), dtype, scale),
+                probe_array(rng, (BHkv, S, D), dtype, scale))
 
     @b.workload
     def _workload(config, problem, dtype, _causal=causal):

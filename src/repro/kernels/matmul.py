@@ -13,9 +13,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import KernelBuilder, Workload, register
+from repro.core.builder import probe_array
 
 from . import ref as _ref
 
@@ -109,6 +111,14 @@ def _build(config, problem, meta, interpret: bool = False):
 
 
 builder.reference(_ref.matmul_ref)
+
+
+@builder.probe
+def _probe(problem, dtype):
+    m, n, k = problem
+    rng = np.random.default_rng(0)
+    return (probe_array(rng, (m, k), dtype),
+            probe_array(rng, (k, n), dtype))
 
 
 @builder.workload

@@ -21,6 +21,14 @@ and if so:
    asset), so other hosts learn the winner without re-tuning. Broadcast
    failures are swallowed — fleet distribution is best-effort, the local
    write is the source of truth.
+
+Between the confidence decision and the wisdom write sits the mandatory
+correctness gate (:class:`repro.sandbox.gate.OracleGate`): the winning
+config is executed against the kernel's reference oracle on synthesized
+probe arguments, and a ``numerics-mismatch``/``crash`` verdict vetoes
+the promotion (recorded on :attr:`PromotionPipeline.rejections`) — a
+fast-but-wrong candidate can win a bracket, but it cannot become
+serving wisdom. Passing configs get ``verified`` provenance.
 """
 
 from __future__ import annotations
@@ -31,6 +39,8 @@ from pathlib import Path
 from repro.core.builder import ArgsMeta
 from repro.core.device import get_device
 from repro.core.wisdom import Wisdom, WisdomRecord, make_provenance
+from repro.sandbox.gate import OracleGate
+from repro.sandbox.verdict import SandboxVerdict
 
 DEFAULT_MARGIN = 0.02
 DEFAULT_MIN_MEASUREMENTS = 1
@@ -44,11 +54,19 @@ class Promotion:
     improvement: float           # fractional, e.g. 0.31 = 31% faster
 
 
+@dataclass
+class Rejection:
+    """A bracket winner the correctness oracle vetoed."""
+    key: tuple                   # (device_kind, problem, dtype)
+    config: dict
+    verdict: SandboxVerdict
+
+
 class PromotionPipeline:
     def __init__(self, kernel, wisdom_dir: Path | str | None = None,
                  margin: float = DEFAULT_MARGIN,
                  min_measurements: int = DEFAULT_MIN_MEASUREMENTS,
-                 broadcast=None):
+                 broadcast=None, oracle="auto"):
         self.kernel = kernel                       # WisdomKernel
         self.wisdom_dir = (wisdom_dir if wisdom_dir is not None
                            else kernel.wisdom_dir)
@@ -59,7 +77,15 @@ class PromotionPipeline:
         #: the same two arguments. None = local-only (the paper's model).
         self.broadcast = broadcast
         self.broadcasts = 0
+        #: The correctness gate every winner must clear before the wisdom
+        #: write. ``"auto"`` = a default :class:`OracleGate` (verify when
+        #: the kernel has probe/reference hooks, allow when it does not);
+        #: None disables gating (tests only — promotions then skip
+        #: verification entirely).
+        self.oracle = OracleGate() if oracle == "auto" else oracle
         self.promotions: list[Promotion] = []
+        #: Winners vetoed by the oracle, in veto order.
+        self.rejections: list[Rejection] = []
 
     def _broadcast(self, record: WisdomRecord) -> None:
         if self.broadcast is None:
@@ -84,11 +110,24 @@ class PromotionPipeline:
         """Write + hot-swap if confident; returns the Promotion or None."""
         if not self.confident(score_us, incumbent_score_us, n_measurements):
             return None
+        verdict = None
+        if self.oracle is not None:
+            verdict = self.oracle.check(self.kernel.builder, config,
+                                        problem, dtype)
+            if not self.oracle.allows(verdict):
+                self.rejections.append(Rejection(
+                    key=(device_kind, tuple(int(x) for x in problem),
+                         dtype),
+                    config=dict(config), verdict=verdict))
+                return None
         dev = get_device(device_kind)
         provenance = make_provenance(strategy="online", evals=evals,
                                      objective=objective)
         provenance["online"] = True
         provenance["live_measurements"] = n_measurements
+        if verdict is not None:
+            provenance = self.oracle.stamp(
+                provenance, self.kernel.builder.name, verdict)
         record = WisdomRecord(
             device_kind=dev.kind, device_family=dev.family,
             problem_size=tuple(int(x) for x in problem), dtype=dtype,

@@ -109,7 +109,7 @@ class OnlineTuner:
                  pool_size: int = 128, bracket_size: int = 8,
                  margin: float = 0.02, min_measurements: int = 1,
                  wisdom_dir: Path | str | None = None,
-                 broadcast=None):
+                 broadcast=None, oracle="auto"):
         if objective not in ("costmodel", "wallclock"):
             raise ValueError(f"unknown objective {objective!r}")
         self.kernel = kernel
@@ -130,7 +130,8 @@ class OnlineTuner:
         self.pipeline = PromotionPipeline(kernel, wisdom_dir=wisdom_dir,
                                           margin=margin,
                                           min_measurements=min_measurements,
-                                          broadcast=broadcast)
+                                          broadcast=broadcast,
+                                          oracle=oracle)
         self.meter = OverheadMeter()
         self.events: list[tuple[str, ScenarioKey, Any]] = []
         self._states: dict[ScenarioKey, _ScenarioState] = {}
@@ -314,6 +315,7 @@ class OnlineTuner:
         if incumbent_us is None:
             return          # wallclock objective, incumbent not yet timed
         device_kind, problem, dtype = state.key
+        rejections_before = len(self.pipeline.rejections)
         promo = self.pipeline.promote(
             device_kind, problem, dtype, config, score_us, incumbent_us,
             n_measurements=n_meas, evals=state.scheduler.screens + n_meas,
@@ -324,6 +326,13 @@ class OnlineTuner:
             state.promotion = promo
             self.events.append(("promote", state.key, promo))
             self._promotion_outcome(state, "promoted")
+        elif len(self.pipeline.rejections) > rejections_before:
+            # the winner beat the incumbent but failed the correctness
+            # oracle — the incumbent keeps serving, and the veto is an
+            # event of its own so dashboards can tell it from "not faster"
+            rej = self.pipeline.rejections[-1]
+            self.events.append(("oracle-reject", state.key, rej))
+            self._promotion_outcome(state, "rejected")
         else:
             self.events.append(("keep-incumbent", state.key,
                                 dict(state.incumbent_config)))

@@ -1,0 +1,45 @@
+"""Crash-isolated evaluation + the correctness oracle gating promotion.
+
+Auto-tuning executes machine-generated kernel variants, and some of
+them are *bad*: they hang, segfault, exhaust memory, or — worst —
+finish fast with the wrong answer. This package contains the two
+defenses every promotion path in the repo runs behind:
+
+* the **sandbox** (:mod:`~repro.sandbox.evaluator`): run any evaluator
+  in a killed-on-timeout, memory-capped child process and classify what
+  happened as a structured :class:`~repro.sandbox.verdict.SandboxVerdict`
+  (``ok`` / ``timeout`` / ``crash`` / ``oom`` / ``numerics-mismatch``),
+  with the child's stderr captured for the post-mortem;
+* the **oracle** (:mod:`~repro.sandbox.oracle`,
+  :mod:`~repro.sandbox.gate`): execute a winning config against the
+  kernel's reference implementation on deterministic probe inputs and
+  veto any promotion whose output does not match within dtype-aware
+  tolerances. Passing records carry a ``verified`` provenance stamp.
+
+The gate is wired into all three promotion paths — online hot-swap,
+fleet shard-winner assembly, and cross-device transfer — and
+:mod:`~repro.sandbox.faults` provides the fault-injection fixtures the
+tests and the ``python -m repro.sandbox check --demo`` CI smoke use to
+prove it. See ``docs/sandboxed-evaluation.md``.
+"""
+
+from .evaluator import (DEFAULT_TIMEOUT_S, SandboxedEvaluator,
+                        SandboxSettings, memory_ceiling, sandboxed_call)
+from .faults import (FAULT_MODES, FAULT_PARAM, FaultyEvaluator,
+                     make_faulty_kernel)
+from .gate import OracleGate, clear_verdict_cache
+from .oracle import CorrectnessOracle
+from .verdict import (STATUS_CRASH, STATUS_NUMERICS, STATUS_OK, STATUS_OOM,
+                      STATUS_TIMEOUT, STATUS_UNVERIFIABLE, VERDICT_STATUSES,
+                      SandboxVerdict)
+
+__all__ = [
+    "DEFAULT_TIMEOUT_S", "SandboxedEvaluator", "SandboxSettings",
+    "memory_ceiling", "sandboxed_call",
+    "FAULT_MODES", "FAULT_PARAM", "FaultyEvaluator", "make_faulty_kernel",
+    "OracleGate", "clear_verdict_cache",
+    "CorrectnessOracle",
+    "STATUS_CRASH", "STATUS_NUMERICS", "STATUS_OK", "STATUS_OOM",
+    "STATUS_TIMEOUT", "STATUS_UNVERIFIABLE", "VERDICT_STATUSES",
+    "SandboxVerdict",
+]

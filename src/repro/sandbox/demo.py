@@ -1,0 +1,285 @@
+"""End-to-end sandbox/oracle smoke: inject faults, count bad promotions.
+
+``run_demo`` is the engine behind ``python -m repro.sandbox check
+--demo`` (the CI sandbox-smoke job). It exercises the whole defense in
+one process, with zero accelerator dependence:
+
+1. **sandbox verdicts** — a :class:`~repro.sandbox.faults.FaultyEvaluator`
+   is run through a fork :class:`~repro.sandbox.evaluator.SandboxedEvaluator`
+   once per fault mode; the demo asserts a hang times out (without
+   killing this process), a raise is a crash, an allocation bomb is an
+   oom, a SIGSEGV is a crash with a signal exit cause;
+2. **oracle verdicts** — the registered faulty kernel's honest config
+   passes the :class:`~repro.sandbox.gate.OracleGate` and its ``wrong``
+   config (fast but incorrect output) is a ``numerics-mismatch``;
+3. **promotion paths** — the wrong config is offered as the winner to
+   all three promotion paths (online pipeline, fleet assembly, transfer
+   record) and must be rejected by each; the honest config must promote
+   with ``verified`` provenance.
+
+The returned report counts ``bad_promotions`` (a wrong config that
+became wisdom anywhere); the CLI exits non-zero unless it is 0 and
+every expectation held.
+"""
+
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+from repro.core.registry import register, unregister
+from repro.core.wisdom import Wisdom
+from repro.core.wisdom_kernel import WisdomKernel
+from repro.distrib.sync import MemoryTransport, transport_wisdom
+from repro.fleet.bus import ControlBus
+from repro.fleet.coordinator import Coordinator
+from repro.fleet.jobs import TuningJob, job_id_for, lease_name
+from repro.online.promotion import PromotionPipeline
+from repro.transfer.predictor import TransferPrediction, TransferResult
+
+from .evaluator import SandboxedEvaluator, SandboxSettings, memory_ceiling
+from .faults import FAULT_PARAM, FaultyEvaluator, make_faulty_kernel
+from .gate import OracleGate, clear_verdict_cache
+from .verdict import (STATUS_CRASH, STATUS_NUMERICS, STATUS_OK, STATUS_OOM,
+                      STATUS_TIMEOUT)
+
+#: Fault mode -> verdict status the fork sandbox must produce for it.
+EXPECTED_VERDICTS = {
+    "none": STATUS_OK,
+    "raise": STATUS_CRASH,
+    "segv": STATUS_CRASH,
+    "oom": STATUS_OOM,
+    "hang": STATUS_TIMEOUT,
+}
+
+_PROBLEM = (8, 8)
+_DTYPE = "float32"
+_DEVICE = "tpu-v5e"
+_WRONG = {"scale": 1, FAULT_PARAM: "wrong"}
+_HONEST = {"scale": 1, FAULT_PARAM: "none"}
+
+
+def _verdict_summary(v) -> dict:
+    """Deterministic slice of a verdict for the report (no wall times)."""
+    out = {"status": v.status}
+    if v.exit_cause:
+        out["exit_cause"] = v.exit_cause
+    if v.max_err is not None:
+        out["mismatch"] = True
+    return out
+
+
+def _sandbox_section(timeout_s: float, hang_s: float,
+                     headroom_bytes: int) -> tuple[dict, list]:
+    """Fault-injected evaluator through the fork sandbox, per mode."""
+    problems: list[str] = []
+    sandbox = SandboxedEvaluator(
+        FaultyEvaluator(hang_s=hang_s),
+        SandboxSettings(timeout_s=timeout_s,
+                        memory_bytes=memory_ceiling(headroom_bytes)))
+    section: dict = {}
+    for mode, want in EXPECTED_VERDICTS.items():
+        result = sandbox({"scale": 1, FAULT_PARAM: mode})
+        _config, verdict = sandbox.verdicts[-1]
+        section[mode] = _verdict_summary(verdict)
+        if verdict.status != want:
+            problems.append(f"sandbox: fault={mode} produced verdict "
+                            f"{verdict.status!r}, wanted {want!r}")
+        if mode == "none" and not result.feasible:
+            problems.append("sandbox: healthy config came back infeasible")
+        if mode != "none" and result.feasible:
+            problems.append(f"sandbox: fault={mode} came back feasible")
+    return section, problems
+
+
+def _oracle_section(builder, gate: OracleGate) -> tuple[dict, list]:
+    problems: list[str] = []
+    honest = gate.check(builder, _HONEST, _PROBLEM, _DTYPE)
+    wrong = gate.check(builder, _WRONG, _PROBLEM, _DTYPE)
+    if honest.status != STATUS_OK:
+        problems.append(f"oracle: honest config verdict {honest.status!r} "
+                        f"({honest.detail})")
+    if wrong.status != STATUS_NUMERICS:
+        problems.append(f"oracle: wrong config verdict {wrong.status!r}, "
+                        f"wanted {STATUS_NUMERICS!r}")
+    return ({"honest": _verdict_summary(honest),
+             "wrong": _verdict_summary(wrong)}, problems)
+
+
+def _online_path(builder, gate: OracleGate,
+                 wisdom_dir: Path) -> tuple[dict, list, int]:
+    """Wrong config wins the bracket; the pipeline must veto it, then
+    promote the honest runner-up with verified provenance."""
+    problems: list[str] = []
+    kernel = WisdomKernel(builder, wisdom_dir=wisdom_dir,
+                          device_kind=_DEVICE)
+    pipeline = PromotionPipeline(kernel, wisdom_dir=wisdom_dir,
+                                 oracle=gate)
+    vetoed = pipeline.promote(_DEVICE, _PROBLEM, _DTYPE, _WRONG,
+                              score_us=50.5, incumbent_score_us=200.0,
+                              n_measurements=3, evals=16,
+                              objective="costmodel")
+    promoted = pipeline.promote(_DEVICE, _PROBLEM, _DTYPE, _HONEST,
+                                score_us=101.0, incumbent_score_us=200.0,
+                                n_measurements=3, evals=16,
+                                objective="costmodel")
+    if vetoed is not None:
+        problems.append("online: wrong config was promoted")
+    if not pipeline.rejections:
+        problems.append("online: veto was not recorded as a rejection")
+    if promoted is None:
+        problems.append("online: honest config failed to promote")
+    elif promoted.record.provenance.get("verified") is None:
+        problems.append("online: promoted record lacks verified provenance")
+    bad = sum(1 for rec in Wisdom.load(builder.name, wisdom_dir).records
+              if rec.config.get(FAULT_PARAM) != "none")
+    if bad:
+        problems.append(f"online: {bad} wrong record(s) in the wisdom file")
+    return ({"rejections": len(pipeline.rejections),
+             "promotions": len(pipeline.promotions),
+             "rejected_status": (pipeline.rejections[0].verdict.status
+                                 if pipeline.rejections else None)},
+            problems, bad)
+
+
+def _fleet_path(builder, gate: OracleGate) -> tuple[dict, list, int]:
+    """Wrong config wins a shard (and the cross-shard comparison); the
+    coordinator must fall back to the honest shard winner."""
+    problems: list[str] = []
+    bus = ControlBus(MemoryTransport())
+    coord = Coordinator(bus, n_shards=2, oracle=gate)
+    key = (_DEVICE, _PROBLEM, _DTYPE)
+    job = TuningJob(job_id=job_id_for(builder.name, key),
+                    kernel=builder.name, device_kind=_DEVICE,
+                    problem=_PROBLEM, dtype=_DTYPE, n_shards=2,
+                    misses=5)
+    bus.publish("job", job.job_id, job.to_json())
+    shard_results = [
+        {"job": job.job_id, "shard": "s000", "worker": "demo-w0",
+         "strategy": "exhaustive", "evals": 8, "feasible_evals": 8,
+         "best_config": dict(_WRONG), "best_score_us": 50.5},
+        {"job": job.job_id, "shard": "s001", "worker": "demo-w1",
+         "strategy": "exhaustive", "evals": 8, "feasible_evals": 8,
+         "best_config": dict(_HONEST), "best_score_us": 101.0},
+    ]
+    for doc in shard_results:
+        bus.publish("result", lease_name(job.job_id, doc["shard"]), doc)
+    records = coord.assemble()
+    done = bus.fetch("done", job.job_id)
+    if len(records) != 1:
+        problems.append(f"fleet: assembled {len(records)} records, wanted 1")
+    elif records[0].config.get(FAULT_PARAM) != "none":
+        problems.append("fleet: assembled record is the wrong config")
+    elif records[0].provenance.get("verified") is None:
+        problems.append("fleet: assembled record lacks verified provenance")
+    rejected = (done or {}).get("rejected", [])
+    if len(rejected) != 1:
+        problems.append(f"fleet: done doc records {len(rejected)} "
+                        f"rejections, wanted 1")
+    bad = sum(1 for rec in transport_wisdom(bus.transport,
+                                            builder.name).records
+              if rec.config.get(FAULT_PARAM) != "none")
+    if bad:
+        problems.append(f"fleet: {bad} wrong record(s) in fleet wisdom")
+    return ({"assembled": len(records), "rejected": len(rejected),
+             "done_state": (done or {}).get("state")},
+            problems, bad)
+
+
+def _transfer_path(builder, gate: OracleGate) -> tuple[dict, list, int]:
+    """Wrong config ranks first among predictions; ``record(gate=...)``
+    must fall through to the honest runner-up."""
+    problems: list[str] = []
+    predictions = [
+        TransferPrediction(config=dict(_WRONG), source_us=50.5,
+                           smoothed_us=50.5, rank_us=50.5,
+                           predicted_us=50.5),
+        TransferPrediction(config=dict(_HONEST), source_us=101.0,
+                           smoothed_us=101.0, rank_us=101.0,
+                           predicted_us=101.0),
+    ]
+    result = TransferResult(
+        kernel=builder.name, source_device="tpu-v4",
+        target_device=_DEVICE, problem_size=_PROBLEM, dtype=_DTYPE,
+        predictions=predictions, confidence=0.9,
+        components={"entries": 2, "calibration": "workload"})
+    try:
+        record = result.record(gate=gate)
+    except ValueError as e:
+        problems.append(f"transfer: every prediction was vetoed ({e})")
+        return {"recorded": None}, problems, 0
+    bad = 0
+    if record.config.get(FAULT_PARAM) != "none":
+        bad = 1
+        problems.append("transfer: recorded the wrong config")
+    if record.provenance.get("verified") is None:
+        problems.append("transfer: record lacks verified provenance")
+    return ({"recorded": record.config.get(FAULT_PARAM),
+             "score_us": record.score_us}, problems, bad)
+
+
+def run_demo(timeout_s: float = 5.0,
+             memory_mb: int | None = None,
+             out_dir: Path | str | None = None) -> dict:
+    """Run the whole injected-fault gauntlet; return the verdict report.
+
+    ``report["pass"]`` is True iff every fault produced its expected
+    verdict and ``report["bad_promotions"] == 0`` — i.e. no injected
+    wrong-output config became wisdom on any promotion path.
+
+    Example::
+
+        report = run_demo(timeout_s=2.0)
+        assert report["pass"], report["problems"]
+    """
+    builder = make_faulty_kernel(hang_s=3600.0)
+    register(builder)
+    clear_verdict_cache()
+    problems: list[str] = []
+    bad_promotions = 0
+    try:
+        # Fork sandboxing first: FaultyEvaluator is pure numpy, and
+        # forking before anything warms jax keeps the children trivial.
+        headroom = (memory_mb * 2**20 if memory_mb is not None
+                    else 256 * 2**20)
+        sandbox_report, p = _sandbox_section(timeout_s, hang_s=3600.0,
+                                             headroom_bytes=headroom)
+        problems += p
+
+        gate = OracleGate()
+        oracle_report, p = _oracle_section(builder, gate)
+        problems += p
+
+        if out_dir is not None:
+            Path(out_dir).mkdir(parents=True, exist_ok=True)
+            online_report, p, bad = _online_path(builder, gate,
+                                                 Path(out_dir))
+        else:
+            with tempfile.TemporaryDirectory() as tmp:
+                online_report, p, bad = _online_path(builder, gate,
+                                                     Path(tmp))
+        problems += p
+        bad_promotions += bad
+
+        fleet_report, p, bad = _fleet_path(builder, gate)
+        problems += p
+        bad_promotions += bad
+
+        transfer_report, p, bad = _transfer_path(builder, gate)
+        problems += p
+        bad_promotions += bad
+    finally:
+        unregister(builder.name)
+        clear_verdict_cache()
+
+    return {
+        "kernel": builder.name,
+        "timeout_s": timeout_s,
+        "sandbox": sandbox_report,
+        "oracle": oracle_report,
+        "paths": {"online": online_report, "fleet": fleet_report,
+                  "transfer": transfer_report},
+        "bad_promotions": bad_promotions,
+        "problems": problems,
+        "pass": not problems and bad_promotions == 0,
+    }

@@ -1,0 +1,157 @@
+"""Fault injection: evaluators and kernels that misbehave on demand.
+
+The sandbox's test fixtures and the CI smoke demo both need candidates
+that hang, raise, segfault, allocate without bound, or silently compute
+the wrong answer — per config, deterministically. Two injection sites:
+
+* :class:`FaultyEvaluator` — a pure-Python ``Evaluate`` callable whose
+  behaviour is driven by the config's ``fault`` value. Exercises
+  :class:`~repro.sandbox.evaluator.SandboxedEvaluator` with zero kernel
+  machinery (and zero jax state, which keeps fork-based tests clean).
+* :func:`make_faulty_kernel` — a registrable
+  :class:`~repro.core.builder.KernelBuilder` whose *built kernel*
+  misbehaves the same way, with an honest reference and probe. This is
+  what proves the :class:`~repro.sandbox.gate.OracleGate` rejects
+  wrong-output winners in the real promotion paths: the cost model
+  scores the ``wrong`` variant as the *fastest* config, so any ungated
+  path would promote it.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import time
+
+import numpy as np
+
+from repro.core.builder import KernelBuilder, probe_array
+from repro.core.workload import Workload
+from repro.tuner.runner import EvalResult
+
+#: The tunable that injects faults. ``none`` behaves; everything else is
+#: one of the sandbox's failure modes.
+FAULT_PARAM = "fault"
+FAULT_MODES = ("none", "wrong", "hang", "raise", "oom", "segv")
+
+#: Cost-model speed multiplier per fault mode. ``wrong`` is the FASTEST
+#: config on purpose: an ungated promotion path would pick it.
+_COST_FACTOR = {"none": 1.0, "wrong": 0.5, "hang": 0.8, "raise": 0.85,
+                "oom": 0.9, "segv": 0.95}
+
+
+def _misbehave(mode: str, hang_s: float) -> None:
+    """Perform the injected fault (never returns for hang/segv)."""
+    if mode == "hang":
+        time.sleep(hang_s)
+    elif mode == "raise":
+        raise RuntimeError("injected evaluator fault")
+    elif mode == "oom":
+        hoard = []
+        while True:        # allocation bomb: stopped by RLIMIT_AS
+            hoard.append(np.ones((1024, 1024), np.float64))
+    elif mode == "segv":
+        os.kill(os.getpid(), signal.SIGSEGV)
+
+
+class FaultyEvaluator:
+    """An ``Evaluate`` callable that fails the way the config says.
+
+    ``config["fault"]`` selects the behaviour: ``none`` returns a
+    deterministic feasible score, ``hang`` sleeps ``hang_s`` seconds,
+    ``raise`` raises, ``oom`` allocates without bound, ``segv`` delivers
+    SIGSEGV to its own process, and ``wrong`` returns a feasible score
+    (wrong *output* only matters to the oracle, which runs kernels, not
+    evaluators).
+
+    Example::
+
+        ev = SandboxedEvaluator(FaultyEvaluator(),
+                                SandboxSettings(timeout_s=0.5))
+        ev({"fault": "hang"})    # -> infeasible, sandbox:timeout
+    """
+
+    def __init__(self, base_score_us: float = 100.0,
+                 hang_s: float = 3600.0) -> None:
+        self.base_score_us = base_score_us
+        self.hang_s = hang_s
+        self.calls = 0
+
+    def __call__(self, config) -> EvalResult:
+        self.calls += 1
+        mode = str(config.get(FAULT_PARAM, "none"))
+        _misbehave(mode, self.hang_s)
+        scale = int(config.get("scale", 1))
+        return EvalResult(self.base_score_us * _COST_FACTOR.get(mode, 1.0)
+                          * (1.0 + 0.01 * scale), True)
+
+
+def make_faulty_kernel(name: str = "faulty_mul2",
+                       hang_s: float = 3600.0) -> KernelBuilder:
+    """A tunable kernel whose built variant misbehaves per config.
+
+    The honest computation is ``y = 2 * x`` (reference included, probe
+    included, workload included — a fully oracle-checkable kernel). The
+    ``fault`` tunable corrupts it: ``wrong`` returns a plausibly-scaled
+    but incorrect output, ``hang``/``raise``/``oom``/``segv`` do exactly
+    that *when the built kernel executes* — i.e. inside the oracle's
+    check. Register it with :func:`repro.core.register` (and unregister
+    after) to drive end-to-end promotion-gate tests and the CI demo.
+
+    Example::
+
+        builder = make_faulty_kernel()
+        register(builder)
+        try:
+            verdict = OracleGate().check(builder, {"fault": "wrong",
+                                                   "scale": 1},
+                                         (64, 64), "float32")
+            assert verdict.status == "numerics-mismatch"
+        finally:
+            unregister(builder.name)
+    """
+    b = KernelBuilder(name, source="repro.sandbox.faults")
+    b.tune("scale", (1, 2, 4), default=1)
+    b.tune(FAULT_PARAM, FAULT_MODES, default="none")
+
+    @b.problem_size
+    def _problem(x):
+        return tuple(int(d) for d in x.shape)
+
+    @b.build
+    def _build(config, problem, meta, interpret: bool = False):
+        mode = str(config[FAULT_PARAM])
+
+        def run(x):
+            _misbehave(mode, hang_s)
+            out = np.asarray(x, np.float64) * 2.0
+            if mode == "wrong":
+                # well past any dtype tolerance, but not absurd
+                out = out * 1.05 + 0.1
+            return out.astype(np.asarray(x).dtype)
+
+        return run
+
+    @b.reference
+    def _reference(x):
+        return (np.asarray(x, np.float64) * 2.0).astype(
+            np.asarray(x).dtype)
+
+    @b.probe
+    def _probe(problem, dtype):
+        rng = np.random.default_rng(0)
+        return (probe_array(rng, problem, dtype),)
+
+    @b.workload
+    def _workload(config, problem, dtype):
+        n = 1
+        for d in problem:
+            n *= int(d)
+        factor = _COST_FACTOR.get(str(config[FAULT_PARAM]), 1.0)
+        scale = int(config["scale"])
+        return Workload(
+            flops=float(n), hbm_bytes=8.0 * n * factor * (1 + 0.01 * scale),
+            vmem_bytes=4096, grid=1,
+            notes={"fault": config[FAULT_PARAM]})
+
+    return b

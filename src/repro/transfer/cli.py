@@ -34,6 +34,7 @@ from pathlib import Path
 from repro.core.wisdom import TRANSFER_MIN_CONFIDENCE, Wisdom
 from repro.distrib.merge import merge_wisdom
 from repro.distrib.store import WisdomStore
+from repro.sandbox.gate import OracleGate
 from repro.tunebench.dataset import DATASET_SUFFIX, DatasetStore, SpaceDataset
 
 from .predictor import TransferResult, transfer_scenario
@@ -99,10 +100,17 @@ def _cmd_predict(args) -> int:
             print(_result_line(r, threshold))
     eligible = [r for r in results if r.eligible(args.min_confidence)]
     if args.wisdom_dir:
+        gate = None if args.no_verify else OracleGate()
         store = WisdomStore(args.wisdom_dir)
         by_kernel: dict[str, list] = {}
         for r in eligible:
-            by_kernel.setdefault(r.kernel, []).append(r.record())
+            try:
+                by_kernel.setdefault(r.kernel, []).append(
+                    r.record(gate=gate))
+            except ValueError as e:
+                print(f"  reject {r.kernel} "
+                      f"{'x'.join(str(d) for d in r.problem_size)} "
+                      f"{r.dtype}: {e}", file=sys.stderr)
         for kernel, records in sorted(by_kernel.items()):
             merged = merge_wisdom(store.load(kernel),
                                   Wisdom(kernel, records))
@@ -146,6 +154,7 @@ def _cmd_export(args) -> int:
         print(f"export needs exactly one kernel (have {kernels}); "
               f"use --kernel", file=sys.stderr)
         return 1
+    gate = None if args.no_verify else OracleGate()
     records = []
     for ds in sources:
         try:
@@ -153,7 +162,10 @@ def _cmd_export(args) -> int:
         except ValueError:
             continue
         if result.eligible(args.min_confidence):
-            records.append(result.record())
+            try:
+                records.append(result.record(gate=gate))
+            except ValueError as e:
+                print(f"  reject {ds.name()}: {e}", file=sys.stderr)
     doc = Wisdom(kernels[0], records).to_doc()
     text = json.dumps(doc, indent=2, sort_keys=True) + "\n"
     if args.out and args.out != "-":
@@ -183,6 +195,10 @@ def build_parser() -> argparse.ArgumentParser:
                        help="target device kind, e.g. tpu-v4")
         p.add_argument("--min-confidence", type=float, default=None,
                        help="override the serving confidence gate")
+        p.add_argument("--no-verify", action="store_true",
+                       help="skip the correctness-oracle check on "
+                            "records (verified provenance is then "
+                            "omitted)")
 
     p = sub.add_parser("predict",
                        help="transfer recorded spaces to a target device")

@@ -122,26 +122,51 @@ class TransferResult:
                      else float(min_confidence))
         return self.best() is not None and self.confidence >= threshold
 
-    def record(self) -> WisdomRecord:
+    def record(self, gate=None) -> WisdomRecord:
         """The transferred wisdom record for the target device (raises
-        ``ValueError`` when there is no prediction at all)."""
+        ``ValueError`` when there is no prediction at all).
+
+        With a :class:`~repro.sandbox.gate.OracleGate`, predictions are
+        walked in rank order and the first one whose config passes the
+        correctness oracle becomes the record — a top-ranked config that
+        computes the wrong answer on this host falls through to the
+        runner-up instead of being served. Raises ``ValueError`` when
+        the gate vetoes every prediction.
+        """
         top = self.best()
         if top is None:
             raise ValueError(
                 f"no transferable config for {self.kernel} "
                 f"{self.source_device} -> {self.target_device}")
+        verdict = None
+        if gate is not None:
+            top = None
+            for pred in self.predictions:
+                verdict = gate.check(self.kernel, pred.config,
+                                     self.problem_size, self.dtype)
+                if gate.allows(verdict):
+                    top = pred
+                    break
+            if top is None:
+                raise ValueError(
+                    f"every transferable config for {self.kernel} "
+                    f"{self.source_device} -> {self.target_device} failed "
+                    f"the correctness oracle")
         target = get_device(self.target_device)
+        provenance = make_transfer_provenance(
+            source_device=self.source_device,
+            source_entries=int(self.components.get("entries", 0)),
+            confidence=self.confidence,
+            predicted_us=round(top.predicted_us, 6),
+            predictor=self.components.get("calibration", "capability"))
+        if gate is not None:
+            provenance = gate.stamp(provenance, self.kernel, verdict)
         return WisdomRecord(
             device_kind=target.kind, device_family=target.family,
             problem_size=tuple(self.problem_size), dtype=self.dtype,
             config=dict(top.config),
             score_us=round(top.predicted_us, 6),
-            provenance=make_transfer_provenance(
-                source_device=self.source_device,
-                source_entries=int(self.components.get("entries", 0)),
-                confidence=self.confidence,
-                predicted_us=round(top.predicted_us, 6),
-                predictor=self.components.get("calibration", "capability")))
+            provenance=provenance)
 
     def to_json(self, top: int = 5) -> dict:
         return {

@@ -82,21 +82,31 @@ class SpaceEvaluation:
     ``status`` is ``"ok"`` (feasible, ``score_us`` is the objective
     value) or ``"infeasible"`` (restricted, VMEM overflow, failed
     verification, build error — ``error`` says which, ``score_us`` is
-    ``inf``)."""
+    ``inf``). ``verdict`` optionally carries the sandbox verdict that
+    produced an infeasible entry (``timeout``/``crash``/``oom``/
+    ``numerics-mismatch`` — see :mod:`repro.sandbox.verdict`), so a
+    replayed space remembers *how* a config failed, not just that it
+    did; benchmarks charge strategies for re-proposing known-fatal
+    configs. Empty for ordinary entries and omitted from JSON, keeping
+    previously recorded datasets byte-identical."""
 
     config: Config
     score_us: float
     status: str
     error: str = ""
+    verdict: str = ""
 
     @property
     def feasible(self) -> bool:
         return self.status == "ok"
 
     def to_json(self) -> dict:
-        return {"config": dict(self.config),
-                "score_us": (self.score_us if self.feasible else None),
-                "status": self.status, "error": self.error}
+        out = {"config": dict(self.config),
+               "score_us": (self.score_us if self.feasible else None),
+               "status": self.status, "error": self.error}
+        if self.verdict:
+            out["verdict"] = self.verdict
+        return out
 
     @staticmethod
     def from_json(d: dict) -> "SpaceEvaluation":
@@ -105,7 +115,8 @@ class SpaceEvaluation:
             config=dict(d["config"]),
             score_us=(_INFEASIBLE if score is None else float(score)),
             status=str(d.get("status", "ok")),
-            error=str(d.get("error", "")))
+            error=str(d.get("error", "")),
+            verdict=str(d.get("verdict", "")))
 
 
 class SpaceDataset:
@@ -168,12 +179,13 @@ class SpaceDataset:
     # -- mutation ------------------------------------------------------------
 
     def add(self, config: Config, score_us: float, status: str,
-            error: str = "") -> None:
+            error: str = "", verdict: str = "") -> None:
         """Record one evaluation. Re-recording the same config keeps the
         better outcome (an ``"ok"`` score always beats infeasible; two
         ok scores keep the lower), so repeated sessions only sharpen the
         dataset and recording stays deterministic in any order."""
-        ev = SpaceEvaluation(dict(config), float(score_us), status, error)
+        ev = SpaceEvaluation(dict(config), float(score_us), status, error,
+                             verdict)
         key = self.key_for(config)
         cur = self.evaluations.get(key)
         if cur is not None:
@@ -184,10 +196,16 @@ class SpaceDataset:
 
     def record(self, config: Config, result: EvalResult) -> None:
         """Record a tuner :class:`~repro.tuner.runner.EvalResult` — the
-        hook the evaluators' ``record_to`` parameter calls."""
+        hook the evaluators' ``record_to`` parameter calls. Results that
+        came through a :class:`~repro.sandbox.SandboxedEvaluator` carry
+        their verdict (``info["sandbox"]``) into the entry; ``"ok"`` is
+        not stored (it is the default)."""
+        verdict = str(result.info.get("sandbox", ""))
+        if verdict == "ok":
+            verdict = ""
         self.add(config, result.score_us,
                  "ok" if result.feasible else "infeasible",
-                 error=result.error)
+                 error=result.error, verdict=verdict)
 
     # -- queries -------------------------------------------------------------
 

@@ -35,7 +35,9 @@ from .dataset import SpaceDataset
 from .simulate import SimulatedRunner
 
 #: Report schema version (bump on structural changes).
-REPORT_VERSION = 1
+#: v2: per-strategy ``wasted_evals`` + ``verdicts`` (sandbox-verdict
+#: replay — budget burned re-proposing known-fatal configs).
+REPORT_VERSION = 2
 
 #: Default evaluation budget per simulated session.
 DEFAULT_BUDGET = 64
@@ -68,6 +70,14 @@ class StrategyOutcome:
     per_seed_final: list[float]
     per_seed_best_us: list[float]
     passed: bool = field(default=False)
+    #: Evaluations spent re-proposing configs whose recorded sandbox
+    #: verdict already said they fail fatally (summed over seeds). Live,
+    #: each one costs a timeout or a child-process death — lower is
+    #: better, and a strategy that won't learn from crashes shows up
+    #: here even when its fraction-of-optimum looks fine.
+    wasted_evals: int = 0
+    #: Replayed sandbox verdicts by status, summed over seeds.
+    verdicts: dict = field(default_factory=dict)
 
     def to_json(self) -> dict:
         return {"strategy": self.strategy, "threshold": self.threshold,
@@ -75,21 +85,28 @@ class StrategyOutcome:
                 "final_fraction": self.final_fraction,
                 "per_seed_final": self.per_seed_final,
                 "per_seed_best_us": self.per_seed_best_us,
+                "wasted_evals": self.wasted_evals,
+                "verdicts": {k: self.verdicts[k]
+                             for k in sorted(self.verdicts)},
                 "pass": self.passed}
 
 
 def run_on_dataset(dataset: SpaceDataset, strategy: str,
                    budget: int = DEFAULT_BUDGET,
-                   seed: int = 0) -> TuningResult:
+                   seed: int = 0,
+                   runner: SimulatedRunner | None = None) -> TuningResult:
     """One simulated tuning session: ``strategy`` over the recorded space.
 
     Wall-clock budgets are disabled (simulation must not depend on host
     speed); the evaluation budget is the only binding constraint.
+    ``runner`` lets a caller supply the :class:`SimulatedRunner` so it
+    can read the replay counters (hits, verdicts, wasted evals) after
+    the session.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; "
                          f"have {sorted(STRATEGIES)}")
-    sim = SimulatedRunner(dataset)
+    sim = runner if runner is not None else SimulatedRunner(dataset)
     space = dataset.space()
     if strategy == "exhaustive":
         return STRATEGIES["exhaustive"](space, sim, limit=budget)
@@ -144,18 +161,25 @@ def compare(datasets: Sequence[SpaceDataset],
         outcomes = []
         for name in strategies:
             curves, finals, bests = [], [], []
+            wasted = 0
+            verdicts: dict[str, int] = {}
             # Exhaustive enumeration ignores the seed: one session is the
             # whole sample (replicating it would both waste simulation
             # time and dress a constant up as per-seed statistics).
             strategy_seeds = (list(seeds)[:1] if name == "exhaustive"
                               else seeds)
             for seed in strategy_seeds:
-                result = run_on_dataset(ds, name, budget=budget, seed=seed)
+                sim = SimulatedRunner(ds)
+                result = run_on_dataset(ds, name, budget=budget, seed=seed,
+                                        runner=sim)
                 curve = fraction_curve(ds, result, budget)
                 curves.append(curve)
                 finals.append(curve[-1] if curve else 0.0)
                 bests.append(round(result.best_score_us, 6)
                              if result.best_config is not None else None)
+                wasted += sim.wasted_evals
+                for v, n in sim.verdicts.items():
+                    verdicts[v] = verdicts.get(v, 0) + n
             mean_curve = [round(float(np.mean(col)), 6)
                           for col in zip(*curves)] if curves else []
             final = round(float(np.mean(finals)), 6) if finals else 0.0
@@ -163,7 +187,8 @@ def compare(datasets: Sequence[SpaceDataset],
             outcome = StrategyOutcome(
                 strategy=name, threshold=threshold, mean_curve=mean_curve,
                 final_fraction=final, per_seed_final=finals,
-                per_seed_best_us=bests, passed=final >= threshold)
+                per_seed_best_us=bests, passed=final >= threshold,
+                wasted_evals=wasted, verdicts=verdicts)
             all_pass = all_pass and outcome.passed
             outcomes.append(outcome)
         out_datasets.append({
@@ -204,12 +229,14 @@ def report_to_text(report: dict) -> str:
                                       int(q * len(curve)) - 1))]
                      if curve else 0.0 for q in (0.25, 0.5, 1.0)]
             status = "ok  " if s["pass"] else "FAIL"
+            wasted = s.get("wasted_evals", 0)
             lines.append(
                 f"  {status} {s['strategy']:<10} "
                 f"final={s['final_fraction']:.4f} "
                 f"(threshold {s['threshold']:.2f})  "
                 f"curve@25/50/100%: "
-                + "/".join(f"{m:.3f}" for m in marks))
+                + "/".join(f"{m:.3f}" for m in marks)
+                + (f"  wasted={wasted}" if wasted else ""))
     lines.append(f"\noverall: {'PASS' if report['pass'] else 'FAIL'}")
     return "\n".join(lines)
 

@@ -52,6 +52,15 @@ class SimulatedRunner:
         self.calls = 0
         self.hits = 0
         self.misses = 0
+        #: Replayed sandbox verdicts, counted by status (entries recorded
+        #: with a ``verdict`` — crashed/hung/oom/wrong configs).
+        self.verdicts: dict[str, int] = {}
+        #: Evaluations spent re-proposing a config whose recorded verdict
+        #: already said it fails fatally. Live, each of these would cost a
+        #: full sandbox timeout or a child-process death — a strategy
+        #: that keeps walking into them wastes real tuning budget.
+        self.wasted_evals = 0
+        self._seen_fatal: set[str] = set()
 
     def __call__(self, config: Config) -> EvalResult:
         self.calls += 1
@@ -65,5 +74,20 @@ class SimulatedRunner:
             return EvalResult(INFEASIBLE, False, error="not in dataset")
         self.hits += 1
         if not entry.feasible:
+            if entry.verdict:
+                # Replay the sandbox verdict the way a live
+                # SandboxedEvaluator would report it, and charge repeat
+                # proposals of a known-fatal config as wasted budget.
+                self.verdicts[entry.verdict] = (
+                    self.verdicts.get(entry.verdict, 0) + 1)
+                key = self.dataset.key_for(config)
+                if key in self._seen_fatal:
+                    self.wasted_evals += 1
+                self._seen_fatal.add(key)
+                error = entry.error or f"sandbox:{entry.verdict}"
+                if not error.startswith("sandbox:"):
+                    error = f"sandbox:{entry.verdict}: {error}"
+                return EvalResult(INFEASIBLE, False, error=error,
+                                  info={"sandbox": entry.verdict})
             return EvalResult(INFEASIBLE, False, error=entry.error)
         return EvalResult(entry.score_us, True)

@@ -63,34 +63,95 @@ def _tolerances(dtype: str) -> tuple[float, float]:
     return 1e-5, 1e-5
 
 
-def verify_against_reference(builder: KernelBuilder, config: Config,
-                             args: Sequence[np.ndarray],
-                             interpret: bool = True) -> tuple[bool, str]:
-    """Execute the built kernel on ``args`` and compare with the oracle."""
+@dataclass
+class VerifyOutcome:
+    """Structured result of one reference-oracle comparison.
+
+    ``kind`` classifies the failure: ``""`` (passed), ``"build"`` (the
+    kernel could not be built or executed at all), ``"structure"``
+    (output tree/shape mismatch) or ``"numerics"`` (executed fine but
+    ``allclose`` failed). ``max_err`` is the largest absolute elementwise
+    deviation seen across all compared outputs (also populated on
+    success, so callers can report how close a passing config was);
+    ``rtol``/``atol`` are the dtype-aware tolerances the comparison used.
+
+    Example::
+
+        out = verify_outcome(builder, config, probe_args)
+        if not out.ok:
+            print(out.kind, out.error, out.max_err)
+    """
+
+    ok: bool
+    kind: str = ""
+    error: str = ""
+    max_err: float | None = None
+    rtol: float | None = None
+    atol: float | None = None
+
+
+def verify_outcome(builder: KernelBuilder, config: Config,
+                   args: Sequence[np.ndarray],
+                   interpret: bool = True) -> VerifyOutcome:
+    """Execute the built kernel on ``args``, compare with the reference
+    oracle, and classify what happened (see :class:`VerifyOutcome`).
+
+    The comparison is dtype-aware (:func:`_tolerances`) and scales the
+    absolute tolerance by the reference magnitude, so low-precision
+    kernels are judged against realistic accumulation error rather than
+    float32 expectations.
+
+    Example::
+
+        out = verify_outcome(get_kernel("matmul"), config, [a, b])
+        assert out.ok, out.error
+    """
     meta = args_meta(*args)
+    dtype = builder.get_dtype(*meta)
+    rtol, atol = _tolerances(dtype)
     try:
         fn = builder.make(config, meta, interpret=interpret)
         got = jax.tree.map(np.asarray, fn(*args))
     except Exception as e:  # noqa: BLE001 — any build/run failure = invalid
-        return False, f"build/run failed: {type(e).__name__}: {e}"
+        return VerifyOutcome(False, kind="build", rtol=rtol, atol=atol,
+                             error=f"build/run failed: "
+                                   f"{type(e).__name__}: {e}")
     ref_fn = builder.make_reference()
     want = jax.tree.map(np.asarray, ref_fn(*args))
     got_leaves = jax.tree.leaves(got)
     want_leaves = jax.tree.leaves(want)
     if len(got_leaves) != len(want_leaves):
-        return False, "output structure mismatch"
-    dtype = builder.get_dtype(*meta)
-    rtol, atol = _tolerances(dtype)
+        return VerifyOutcome(False, kind="structure", rtol=rtol, atol=atol,
+                             error="output structure mismatch")
+    max_err = 0.0
     for g, w in zip(got_leaves, want_leaves):
         if g.shape != w.shape:
-            return False, f"shape mismatch {g.shape} vs {w.shape}"
-        scale = max(1.0, float(np.max(np.abs(w))))
-        if not np.allclose(np.asarray(g, np.float64),
-                           np.asarray(w, np.float64),
-                           rtol=rtol, atol=atol * scale):
-            err = float(np.max(np.abs(np.asarray(g, np.float64) - w)))
-            return False, f"allclose failed, max abs err {err:.3e}"
-    return True, ""
+            return VerifyOutcome(
+                False, kind="structure", rtol=rtol, atol=atol,
+                error=f"shape mismatch {g.shape} vs {w.shape}")
+        g64 = np.asarray(g, np.float64)
+        w64 = np.asarray(w, np.float64)
+        max_err = max(max_err, float(np.max(np.abs(g64 - w64)))
+                      if g64.size else 0.0)
+        scale = max(1.0, float(np.max(np.abs(w64))) if w64.size else 1.0)
+        if not np.allclose(g64, w64, rtol=rtol, atol=atol * scale):
+            return VerifyOutcome(
+                False, kind="numerics", max_err=max_err,
+                rtol=rtol, atol=atol,
+                error=f"allclose failed, max abs err {max_err:.3e}")
+    return VerifyOutcome(True, max_err=max_err, rtol=rtol, atol=atol)
+
+
+def verify_against_reference(builder: KernelBuilder, config: Config,
+                             args: Sequence[np.ndarray],
+                             interpret: bool = True) -> tuple[bool, str]:
+    """Execute the built kernel on ``args`` and compare with the oracle.
+
+    Compatibility wrapper over :func:`verify_outcome` returning the
+    historical ``(ok, message)`` pair.
+    """
+    out = verify_outcome(builder, config, args, interpret=interpret)
+    return out.ok, out.error
 
 
 class CostModelEvaluator:

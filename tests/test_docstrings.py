@@ -10,6 +10,7 @@ import inspect
 import pytest
 
 import repro.fleet
+import repro.sandbox
 import repro.transfer
 import repro.tunebench
 import repro.tuner
@@ -19,6 +20,7 @@ MODULES = {
     "repro.fleet": (repro.fleet, True),
     "repro.tunebench": (repro.tunebench, False),   # docstring only
     "repro.transfer": (repro.transfer, False),     # docstring only
+    "repro.sandbox": (repro.sandbox, True),
 }
 
 

@@ -497,3 +497,72 @@ def test_tune_cli_dedups_captures_and_dry_runs(tmp_path, capsys,
     assert out.count("best=") == 1                # tuned once, not twice
     assert "skipped (same scenario" in out
     assert len(WisdomStore(wisdom_dir).load("matmul").records) == 1
+
+
+# ------------------------ sandboxed shard evaluation -------------------------
+
+class _RaisingEvaluator:
+    """Counts every config it sees; raises on exactly one of them."""
+
+    def __init__(self, bad_config):
+        self.bad_config = dict(bad_config)
+        self.calls = []
+
+    def __call__(self, config):
+        from repro.tuner.runner import EvalResult
+        self.calls.append(dict(config))
+        if {k: config[k] for k in self.bad_config} == self.bad_config:
+            raise RuntimeError("injected mid-config evaluator crash")
+        return EvalResult(float(config["bx"] * config["by"]), True)
+
+
+def test_crashed_shard_resumes_without_rerunning_checkpointed_configs():
+    """ISSUE 7 regression: a shard whose evaluator crashed mid-config is
+    re-claimed and re-runs only the configs the checkpoint does not
+    cover — including *not* re-running the config that crashed, whose
+    sandbox verdict is already recorded in the checkpointed log."""
+    from repro.fleet.jobs import lease_name
+    from repro.fleet.worker import WorkerCrash
+
+    bus = ControlBus(MemoryTransport())
+    clock = ManualClock()
+    job = _job(n_shards=1)
+    bus.publish("job", job.job_id, job.to_json())
+    bad = {"bx": 8, "by": 32}          # 3rd in enumeration order
+
+    # Worker 0: the inline sandbox turns the evaluator's raise into an
+    # infeasible sandbox:crash evaluation (checkpointed like any other),
+    # then the injected WorkerCrash kills the worker after 5 evals.
+    ev0 = _RaisingEvaluator(bad)
+    w0 = FleetWorker(bus, "w0", clock=clock, ttl_s=30.0,
+                     checkpoint_every=1, crash_after_evals=5,
+                     evaluator_factory=lambda builder, job_: ev0)
+    with pytest.raises(WorkerCrash):
+        w0.run_once()
+    assert len(ev0.calls) == 5 and bad in ev0.calls
+
+    # The crash lost nothing: all 5 evaluations (the crashing config's
+    # sandbox verdict included) are in the checkpointed state doc.
+    state = bus.fetch("state", lease_name(job.job_id, "s000"))
+    evals = state["evaluations"]
+    assert len(evals) == 5
+    crashed = [e for e in evals if e["config"] == bad]
+    assert len(crashed) == 1
+    assert crashed[0]["feasible"] is False
+    assert crashed[0]["error"].startswith("sandbox:crash")
+    assert "injected mid-config evaluator crash" in crashed[0]["error"]
+
+    # The lease expires; a second worker re-claims and finishes the
+    # shard, replaying the checkpoint instead of re-measuring it.
+    clock.advance(31.0)
+    ev1 = _RaisingEvaluator(bad)       # would raise again if re-run
+    w1 = FleetWorker(bus, "w1", clock=clock, ttl_s=30.0,
+                     evaluator_factory=lambda builder, job_: ev1)
+    assert w1.run_once() == lease_name(job.job_id, "s000")
+    assert len(ev1.calls) == N_VALID - 5
+    assert bad not in ev1.calls
+    result = bus.fetch("result", lease_name(job.job_id, "s000"))
+    assert result["worker"] == "w1"
+    assert result["evals"] == N_VALID
+    assert result["feasible_evals"] == N_VALID - 1
+    assert result["best_config"] == {"bx": 8, "by": 8}

@@ -399,3 +399,62 @@ def test_compare_runs_exhaustive_once_per_dataset():
                for s in report["datasets"][0]["strategies"]}
     assert len(by_name["exhaustive"]["per_seed_final"]) == 1
     assert len(by_name["random"]["per_seed_final"]) == 3
+
+
+# --------------------------- sandbox-verdict replay --------------------------
+
+
+def faulted_dataset() -> SpaceDataset:
+    """quadratic_dataset with every x == 0 config recorded as a sandbox
+    crash (the way a SandboxedEvaluator's ``record_to`` persists one)."""
+    s = small_space()
+    ds = SpaceDataset("quadfault", s, (8, 8), "float32", "tpu-v5e")
+    for cfg in s.enumerate():
+        if cfg["x"] == 0:
+            ds.add(cfg, float("inf"), "infeasible",
+                   error="sandbox:crash: injected evaluator fault",
+                   verdict="crash")
+        else:
+            ds.add(cfg, (cfg["x"] - 2) ** 2 + (cfg["y"] - 1) ** 2 + 1.0,
+                   "ok")
+    return ds
+
+
+def test_dataset_verdict_field_roundtrips_and_stays_compact():
+    ds = faulted_dataset()
+    doc = json.loads(json.dumps(ds.to_doc()))
+    assert doc["version"] == DATASET_VERSION       # no schema bump
+    again = SpaceDataset.from_doc(doc)
+    assert again.lookup({"x": 0, "y": 1}).verdict == "crash"
+    ok_entry = again.lookup({"x": 2, "y": 1})
+    assert ok_entry.verdict == ""
+    assert "verdict" not in ok_entry.to_json()     # absent key, not ""
+
+
+def test_simulated_runner_replays_sandbox_verdicts_and_counts_waste():
+    sim = SimulatedRunner(faulted_dataset())
+    first = sim({"x": 0, "y": 0})
+    assert not first.feasible
+    assert first.error.startswith("sandbox:crash")
+    assert first.info["sandbox"] == "crash"
+    sim({"x": 0, "y": 1})            # a different fatal config: not waste
+    assert sim.wasted_evals == 0
+    sim({"x": 0, "y": 0})            # re-proposing a known crash: waste
+    assert sim.wasted_evals == 1
+    assert sim.verdicts == {"crash": 3}
+    assert sim({"x": 2, "y": 1}).feasible          # plain replay untouched
+
+
+def test_compare_report_v2_carries_verdict_counters():
+    ds = faulted_dataset()
+    report = compare([ds], strategies=["exhaustive"], budget=12,
+                     seeds=(0,))
+    assert report["version"] == 2
+    out = report["datasets"][0]["strategies"][0]
+    assert out["verdicts"] == {"crash": 3}         # all three x == 0 configs
+    assert out["wasted_evals"] == 0                # exhaustive never repeats
+    # run_on_dataset's runner= hook exposes the counters to callers
+    sim = SimulatedRunner(ds)
+    run_on_dataset(ds, "random", budget=30, seed=0, runner=sim)
+    assert sim.verdicts.get("crash", 0) >= 1
+    assert sim.wasted_evals == 0                   # random dedups proposals
