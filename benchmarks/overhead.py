@@ -8,7 +8,9 @@ is only acceptable if the disabled path costs nothing measurable. The
 gate microbenchmarks one disabled instrument site (a ``metrics()``
 global read plus an ``is not None`` branch) against the pinned budget
 below and exits non-zero when it is blown — CI runs this on every
-change.
+change. The profiler (repro.prof) sits on the same hot path, so the
+gate also pins its detached site (attribute read + branch) and the
+amortized cost of sampled profiling at the default 1-in-16 period.
 """
 
 from __future__ import annotations
@@ -35,6 +37,18 @@ DISABLED_SITE_BUDGET_NS = 2_000.0
 #: event.
 ENABLED_SITE_BUDGET_NS = 60_000.0
 
+#: The detached profiler site on the launch path is one attribute read
+#: + ``is not None`` — it shares the disabled-obs budget.
+PROF_DISABLED_SITE_BUDGET_NS = DISABLED_SITE_BUDGET_NS
+
+#: Amortized per-launch cost of *sampled* profiling at the default
+#: period (``Profiler.due`` every launch + one full workload-hook
+#: profile every 16th). The hook builds a Workload dataclass and a
+#: KernelProfile — microseconds of Python — so amortized over the
+#: period it must stay well under typical kernel launch latencies;
+#: 25µs leaves slack for slow shared CI hosts.
+PROF_SAMPLED_BUDGET_NS = 25_000.0
+
 
 def _site_cost_ns(stmt: str, setup: str, number: int = 200_000,
                   repeats: int = 7) -> float:
@@ -60,8 +74,43 @@ def measure() -> dict[str, float]:
         "    m.counter('launch.count', kernel='k').inc()",
         base + "obs.disable(); obs.enable(trace=False)")
     floor = _site_cost_ns("pass", base)
-    return {"disabled_site_ns": disabled, "enabled_site_ns": enabled,
-            "loop_floor_ns": floor}
+    out = {"disabled_site_ns": disabled, "enabled_site_ns": enabled,
+           "loop_floor_ns": floor}
+    out.update(measure_prof())
+    return out
+
+
+def measure_prof() -> dict[str, float]:
+    """Profiler launch-path costs (ns per launch): the detached site
+    (``self.profiler`` read + branch, what every unprofiled process
+    pays) and the amortized cost of sampled profiling at the default
+    period (``due()`` every launch, a full workload-hook profile every
+    16th)."""
+    setup = (
+        "from repro.obs import runtime as obs\n"
+        "obs.disable()\n"
+        "from repro.core import get_kernel\n"
+        "from repro.core.device import get_device\n"
+        "from repro.prof.profiler import Profiler\n"
+        "class _K:\n"
+        "    profiler = None\n"
+        "k = _K()\n"
+        "builder = get_kernel('advec_u')\n"
+        "cfg = builder.default_config()\n"
+        "dev = get_device('tpu-v5e')\n"
+        "pr = Profiler(sample_every=16, max_profiles=64)\n")
+    detached = _site_cost_ns(
+        "p = k.profiler\n"
+        "if p is not None and p.due('advec_u'):\n"
+        "    pass",
+        setup)
+    sampled = _site_cost_ns(
+        "if pr.due('advec_u'):\n"
+        "    pr.profile_launch(builder, cfg, (32, 32, 128), 'float32',\n"
+        "                      dev, 12.5, tier='exact', baseline_us=12.0)",
+        setup, number=50_000)
+    return {"prof_disabled_site_ns": detached,
+            "prof_sampled_amortized_ns": sampled}
 
 
 def check() -> int:
@@ -71,12 +120,22 @@ def check() -> int:
           f"(budget {DISABLED_SITE_BUDGET_NS:.0f} ns)")
     print(f"enabled counter inc:      {costs['enabled_site_ns']:.1f} ns "
           f"(budget {ENABLED_SITE_BUDGET_NS:.0f} ns)")
+    print(f"detached profiler site:   "
+          f"{costs['prof_disabled_site_ns']:.1f} ns "
+          f"(budget {PROF_DISABLED_SITE_BUDGET_NS:.0f} ns)")
+    print(f"sampled profiling (amortized, 1/16): "
+          f"{costs['prof_sampled_amortized_ns']:.1f} ns "
+          f"(budget {PROF_SAMPLED_BUDGET_NS:.0f} ns)")
     print(f"bare loop floor:          {costs['loop_floor_ns']:.1f} ns")
     failures = []
     if costs["disabled_site_ns"] > DISABLED_SITE_BUDGET_NS:
         failures.append("disabled-site budget blown")
     if costs["enabled_site_ns"] > ENABLED_SITE_BUDGET_NS:
         failures.append("enabled-site budget blown")
+    if costs["prof_disabled_site_ns"] > PROF_DISABLED_SITE_BUDGET_NS:
+        failures.append("detached-profiler-site budget blown")
+    if costs["prof_sampled_amortized_ns"] > PROF_SAMPLED_BUDGET_NS:
+        failures.append("sampled-profiling budget blown")
     if failures:
         print("FAIL: " + "; ".join(failures))
         return 1

@@ -17,11 +17,17 @@
                                   the hidden target optimum reached by
                                   transferred wisdom vs cold fallback)
 
-Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--json PATH] [module ...]
+
+Besides the CSV on stdout, every run writes a machine-readable artifact
+(default ``BENCH_results.json``; ``--json PATH`` overrides): per module,
+the header-keyed rows plus wall time, so CI jobs and notebooks consume
+results without re-parsing CSV.
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -31,16 +37,50 @@ MODULES = ("capture_bench", "distribution", "tuning_session",
            "fleet_tuning", "strategy_bench", "transfer_portability")
 
 
+def rows_to_records(rows: list[str]) -> list[dict]:
+    """CSV rows (first column = table name; a header row per table) as
+    a list of header-keyed dicts."""
+    headers: dict[str, list[str]] = {}
+    records = []
+    for row in rows:
+        cells = row.split(",")
+        table, cells = cells[0], cells[1:]
+        if table not in headers:
+            headers[table] = cells
+            continue
+        rec = {"table": table}
+        for key, value in zip(headers[table], cells):
+            rec[key] = value
+        records.append(rec)
+    return records
+
+
 def main() -> None:
-    want = sys.argv[1:] or MODULES
+    argv = sys.argv[1:]
+    out_path = "BENCH_results.json"
+    if "--json" in argv:
+        i = argv.index("--json")
+        out_path = argv[i + 1]
+        del argv[i:i + 2]
+    want = argv or MODULES
     print("table,_fields...")
+    results: dict[str, dict] = {}
     for name in want:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.perf_counter()
+        rows = []
         for row in mod.run():
+            rows.append(str(row))
             print(row)
-        print(f"# {name} finished in {time.perf_counter()-t0:.1f}s",
-              file=sys.stderr)
+        dt = time.perf_counter() - t0
+        results[name] = {"rows": rows_to_records(rows),
+                         "seconds": round(dt, 3)}
+        print(f"# {name} finished in {dt:.1f}s", file=sys.stderr)
+    with open(out_path, "w") as f:
+        json.dump({"version": 1, "modules": results}, f,
+                  indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -9,10 +9,15 @@ report are two views of the same deterministic computation. Asserts:
   * the report is deterministic (two runs produce byte-identical JSON —
     the ISSUE 4 acceptance criterion);
   * every strategy clears its fraction-of-optimum regression threshold
-    (a failure means a strategy change made the tuner worse).
+    (a failure means a strategy change made the tuner worse);
+  * the profile-guided surrogate (repro.prof.guided) meets or beats the
+    plain ridge surrogate's fraction-of-optimum at every recorded
+    budget on every shipped space — the profile-features-help
+    regression gate.
 
 CSV: dataset, strategy, final_fraction, threshold, frac@25%, frac@50%,
-best_us, optimum_us, pass.
+best_us, optimum_us, pass — then per-surrogate rerank rows:
+dataset, surrogate, fraction@budget columns, fit_quality, pass.
 """
 
 from __future__ import annotations
@@ -55,3 +60,25 @@ def run():
                           best, ds["optimum_us"], int(s["pass"]))
     assert report["pass"], \
         "a strategy dropped below its fraction-of-optimum threshold"
+
+    # Profile-guided surrogate re-ranking (repro.prof.guided): train on
+    # a small subsample of recorded scores, rank the space by surrogate
+    # prediction, and compare fraction-of-optimum at fixed budgets. The
+    # gate: profile features must never hurt.
+    from repro.prof.guided import rerank_gate, surrogate_rerank
+    yield csv_row("rerank", "dataset", "surrogate",
+                  "frac_at_8", "frac_at_16", "frac_at_32", "frac_at_64",
+                  "fit_quality", "pass")
+    for ds in datasets:
+        r = surrogate_rerank(ds)
+        again = surrogate_rerank(ds)
+        assert r == again, "surrogate re-rank is not deterministic"
+        problems = rerank_gate(r)
+        for row in r["surrogates"]:
+            yield csv_row("rerank", r["dataset"], row["surrogate"],
+                          *(f"{row['fraction_at'][str(b)]:.4f}"
+                            for b in r["budgets"]),
+                          f"{row['fit_quality']:.4f}", int(not problems))
+        assert not problems, \
+            f"profile-guided surrogate regressed on {r['dataset']}: " \
+            + "; ".join(problems)

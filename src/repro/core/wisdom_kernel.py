@@ -83,6 +83,14 @@ class WisdomKernel:
         if online_requested():
             from repro.online import OnlineTuner  # deferred: avoids cycle
             self.online = OnlineTuner(self, wisdom_dir=wisdom_dir)
+        #: Sampled launch profiler (see ``repro.prof``) — None unless
+        #: attached explicitly or via KERNEL_LAUNCHER_PROF; the per-launch
+        #: cost of the disabled site is one attribute check.
+        self.profiler = None
+        self._profile_baselines: dict[tuple, float | None] = {}
+        if os.environ.get("KERNEL_LAUNCHER_PROF"):
+            from repro.prof.profiler import process_profiler  # deferred
+            self.profiler = process_profiler()
 
     # -- pieces ---------------------------------------------------------------
 
@@ -114,6 +122,12 @@ class WisdomKernel:
         """Attach an online tuning service (see ``repro.online``)."""
         self.online = tuner
 
+    def attach_profiler(self, profiler) -> None:
+        """Attach a :class:`repro.prof.Profiler`: every Nth eager launch
+        gets a roofline profile (bottleneck class, achieved fraction of
+        peak, drift vs the wisdom-recorded baseline)."""
+        self.profiler = profiler
+
     def prewarm(self, meta: ArgsMeta, config: Config) -> bool:
         """Compile+cache ``config`` for the scenario described by ``meta``
         ahead of any launch. Returns True if a compilation happened."""
@@ -136,6 +150,12 @@ class WisdomKernel:
         rec, tier = wisdom.select_record(self.device_kind, problem, dtype)
         cfg = (dict(rec.config) if rec is not None
                else self.builder.default_config())
+        # Exact-tier wisdom scores are this scenario's drift baseline:
+        # the latency the config was promoted at. Fuzzy/transferred
+        # matches came from a different scenario, so no baseline.
+        self._profile_baselines[key] = (
+            float(rec.score_us) if rec is not None and tier == "exact"
+            and rec.score_us > 0 else None)
         m = obs.metrics()
         if m is not None and rec is not None and rec.is_transferred():
             m.histogram("select.transfer_confidence", UNIT_BUCKETS,
@@ -242,6 +262,13 @@ class WisdomKernel:
                          "cached": cached,
                          "compile_us": round(compile_s * 1e6, 3),
                          "launch_us": round(launch_s * 1e6, 3)}})
+        profiler = self.profiler
+        if profiler is not None and profiler.due(self.builder.name):
+            profiler.profile_launch(
+                self.builder, config, problem, dtype, self.device_kind,
+                launch_s * 1e6, tier=tier,
+                baseline_us=self._profile_baselines.get(
+                    (self.device_kind, problem, dtype)))
         if online is not None:
             online.after_launch(problem, dtype, config, tier, launch_s)
         return out

@@ -12,6 +12,12 @@ counters first) it renders, deterministically:
   cross-device predictions were;
 * the **top missing scenarios** — the launch-weighted list of scenarios
   the fleet should tune next (the same signal the demand ranker uses);
+* **sandbox & oracle** outcomes — crash-isolated evaluation verdicts
+  and correctness-check pass/fail mix (with max-error stats) when those
+  series are present;
+* **profiler bottlenecks** — per-kernel roofline classification of
+  sampled launches (``prof.*`` series from :mod:`repro.prof`), with
+  mean achieved roofline fraction and drift-event counts;
 * one-line summaries of serve / online / fleet / sync activity when
   those series are present.
 
@@ -123,6 +129,24 @@ def _counter_total(snapshot: dict, name: str,
     return total
 
 
+def _counter_rows(snapshot: dict, name: str) -> list[tuple[dict, float]]:
+    rows = []
+    for key, value in sorted(snapshot.get("counters", {}).items()):
+        n, labels = parse_series(key)
+        if n == name:
+            rows.append((labels, value))
+    return rows
+
+
+def _histogram_rows(snapshot: dict, name: str) -> list[tuple[dict, dict]]:
+    rows = []
+    for key in sorted(snapshot.get("histograms", {})):
+        n, labels = parse_series(key)
+        if n == name:
+            rows.append((labels, snapshot["histograms"][key]))
+    return rows
+
+
 def render_report(snapshot: dict, top: int = 10) -> str:
     """The wisdom-health report as text. Pure: same snapshot, same bytes.
 
@@ -193,6 +217,59 @@ def render_report(snapshot: dict, top: int = 10) -> str:
         lines.append(f"{sh.kernel} {sh.scenario}: "
                      f"misses={_fmt_n(sh.misses)} "
                      f"dominant-tier={worst}")
+
+    # Sandbox / oracle (PR 7): crash-isolated evaluation outcomes and
+    # correctness-oracle verdicts, when those series are present.
+    sandbox = _counter_rows(snapshot, "sandbox.verdict")
+    oracle = _counter_rows(snapshot, "oracle.checks")
+    if sandbox or oracle:
+        _section(lines, "Sandbox & oracle")
+        if sandbox:
+            total = sum(v for _, v in sandbox)
+            parts = " ".join(f"{labels.get('status', '?')}={_fmt_n(v)}"
+                             for labels, v in sandbox)
+            lines.append(f"sandbox verdicts: n={_fmt_n(total)} [{parts}]")
+        by_k: dict[str, dict[str, float]] = {}
+        for labels, v in oracle:
+            agg = by_k.setdefault(labels.get("kernel", "?"), {})
+            status = labels.get("status", "?")
+            agg[status] = agg.get(status, 0.0) + v
+        errs = {labels.get("kernel", "?"): h
+                for labels, h in _histogram_rows(snapshot, "oracle.max_err")}
+        for kernel in sorted(by_k):
+            agg = by_k[kernel]
+            parts = " ".join(f"{s}={_fmt_n(agg[s])}" for s in sorted(agg))
+            h = errs.get(kernel)
+            tail = ""
+            if h and h["count"]:
+                tail = (f" max-err mean={h['sum'] / h['count']:.2e} "
+                        f"n={h['count']}")
+            lines.append(f"oracle {kernel}: [{parts}]{tail}")
+
+    # Profiler (repro.prof): sampled-launch roofline classification.
+    prof = _counter_rows(snapshot, "prof.launches")
+    if prof:
+        _section(lines, "Profiler (roofline bottlenecks)")
+        by_pk: dict[str, dict[str, float]] = {}
+        for labels, v in prof:
+            agg = by_pk.setdefault(labels.get("kernel", "?"), {})
+            b = labels.get("bottleneck", "?")
+            agg[b] = agg.get(b, 0.0) + v
+        fracs = {labels.get("kernel", "?"): h for labels, h in
+                 _histogram_rows(snapshot, "prof.roofline_fraction")}
+        for kernel in sorted(by_pk):
+            agg = by_pk[kernel]
+            total = sum(agg.values())
+            dominant = max(sorted(agg), key=lambda b: agg[b])
+            parts = " ".join(f"{b}={_fmt_n(agg[b])}" for b in sorted(agg))
+            h = fracs.get(kernel)
+            frac = (f" mean-roofline-frac="
+                    f"{h['sum'] / h['count']:.3f}"
+                    if h and h["count"] else "")
+            drift = _counter_total(snapshot, "prof.drift", kernel=kernel)
+            lines.append(f"{kernel}: profiled={_fmt_n(total)} "
+                         f"{dominant}-bound [{parts}]{frac} "
+                         f"drift-events={_fmt_n(drift)}")
 
     activity: list[str] = []
     launches = _counter_total(snapshot, "launch.count")

@@ -1,9 +1,11 @@
 """Span tracing exporting Chrome ``trace_event`` JSON (Perfetto-viewable).
 
 A :class:`Tracer` records *complete* events (``"ph": "X"`` — begin time +
-duration, the compact form) and *instant* events (``"ph": "i"``), tagged
-with the subsystem as the category. ``to_chrome()`` emits the standard
-``{"traceEvents": [...]}`` wrapper that chrome://tracing and
+duration, the compact form), *instant* events (``"ph": "i"``), and
+*counter* events (``"ph": "C"`` — named numeric series Perfetto renders
+as stacked track charts; the profiler exports roofline counters this
+way), tagged with the subsystem as the category. ``to_chrome()`` emits
+the standard ``{"traceEvents": [...]}`` wrapper that chrome://tracing and
 https://ui.perfetto.dev open directly, so a serving incident can be read
 as a timeline: selection, compile, launch, sync ticks, fleet steps.
 
@@ -83,6 +85,26 @@ class Tracer:
             "args": {k: v for k, v in sorted(args.items())},
         })
 
+    def counter(self, name: str, cat: str = "repro", **values) -> None:
+        """Record a counter sample (``"ph": "C"``): one or more named
+        numeric series at the current time. Perfetto plots each counter
+        name as a track; the kernel profiler exports achieved-fraction /
+        arithmetic-intensity samples this way. Non-numeric values raise
+        — counter tracks are charts, not metadata."""
+        args = {}
+        for k, v in sorted(values.items()):
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                raise ValueError(f"counter series {k!r} has non-numeric "
+                                 f"value {v!r}")
+            args[k] = v
+        if not args:
+            raise ValueError("counter event needs at least one series")
+        self.events.append({
+            "name": name, "cat": cat, "ph": "C",
+            "ts": self._now_us(), "pid": self.pid, "tid": self._tid(),
+            "args": args,
+        })
+
     def to_chrome(self) -> dict:
         """The standard Chrome ``trace_event`` JSON object."""
         return {"traceEvents": list(self.events),
@@ -115,8 +137,9 @@ def load_trace(path: Path | str) -> dict:
 
 def validate_trace(doc) -> list[str]:
     """Schema check for Chrome ``trace_event`` JSON: the wrapper shape,
-    required per-event keys, numeric timestamps, and non-negative span
-    durations. Returns a list of problems (empty = valid)."""
+    required per-event keys, numeric timestamps, non-negative span
+    durations, and numeric counter ("C") series. Returns a list of
+    problems (empty = valid)."""
     errors: list[str] = []
     if not isinstance(doc, dict) or not isinstance(
             doc.get("traceEvents"), list):
@@ -136,4 +159,15 @@ def validate_trace(doc) -> list[str]:
                 errors.append(f"event {i}: complete event without dur")
             elif isinstance(ev["dur"], (int, float)) and ev["dur"] < 0:
                 errors.append(f"event {i}: negative duration")
+        if ev.get("ph") == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                errors.append(f"event {i}: counter event without series "
+                              f"(args must be a non-empty object)")
+            else:
+                for k, v in args.items():
+                    if isinstance(v, bool) or not isinstance(
+                            v, (int, float)):
+                        errors.append(f"event {i}: counter series {k!r} "
+                                      f"is not numeric")
     return errors

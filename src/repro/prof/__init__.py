@@ -1,0 +1,64 @@
+"""Kernel profiler: per-launch roofline counters, bottleneck attribution,
+and profile-guided tuning.
+
+PR 6's telemetry says *that* a launch happened; this package says *why
+it is fast or slow*. A :class:`KernelProfile` joins one launch's
+measured latency with the roofline counters the workload hook and
+device capability vector already know (FLOPs, HBM/collective bytes,
+arithmetic intensity, VMEM pressure), classifies the launch as
+compute-/memory-/collective-bound, and flags latency drift against the
+wisdom-recorded baseline. The :class:`Profiler` samples the serving
+launch path (``WisdomKernel``/``ServeEngine``, every Nth launch,
+overhead-gated), runs always-on inside tuner evaluations so recorded
+datasets gain per-config profile fields, and fans every profile out to
+``prof.*`` metrics and Chrome counter events. :func:`surrogate_rerank`
+closes the loop: the recorded counters become regression features for
+the tuner's surrogate (``fit_from_dataset(profile_features=True)``),
+and ``benchmarks/strategy_bench.py`` gates that the profile-guided
+surrogate finds near-optimal configs from fewer evaluations.
+
+``python -m repro.prof`` exposes profile/report/roofline/diff/demo;
+``KERNEL_LAUNCHER_PROF=N`` attaches a process-wide profiler ambiently.
+"""
+
+from .guided import (DEFAULT_BUDGETS, DEFAULT_TRAIN_EVERY, rerank_gate,
+                     surrogate_rerank)
+from .profile import (BOTTLENECKS, DRIFT_THRESHOLD, PROFILE_FEATURES,
+                      PROFILE_VERSION, KernelProfile, ProfileVersionError,
+                      classify_bottleneck, profile_feature_vector,
+                      profile_fields, profile_from_workload)
+from .profiler import (DEFAULT_SAMPLE_EVERY, PROF_ENV, Profiler,
+                       StepProfiler, load_profiles, process_profiler,
+                       prof_requested, reset_process_profiler,
+                       save_profiles, summarize)
+from .report import classify_dataset, render_attribution, render_profiles
+
+__all__ = [
+    "BOTTLENECKS",
+    "DEFAULT_BUDGETS",
+    "DEFAULT_SAMPLE_EVERY",
+    "DEFAULT_TRAIN_EVERY",
+    "DRIFT_THRESHOLD",
+    "KernelProfile",
+    "PROF_ENV",
+    "PROFILE_FEATURES",
+    "PROFILE_VERSION",
+    "Profiler",
+    "ProfileVersionError",
+    "StepProfiler",
+    "classify_bottleneck",
+    "classify_dataset",
+    "load_profiles",
+    "process_profiler",
+    "prof_requested",
+    "profile_feature_vector",
+    "profile_fields",
+    "profile_from_workload",
+    "render_attribution",
+    "render_profiles",
+    "rerank_gate",
+    "reset_process_profiler",
+    "save_profiles",
+    "summarize",
+    "surrogate_rerank",
+]

@@ -1,0 +1,255 @@
+"""``python -m repro.prof`` — profile / report / roofline / diff / demo.
+
+Operator entry points over kernel profiles:
+
+* ``profile``  — profile one kernel scenario: join the config's workload
+  with a (simulated or supplied) latency and print the versioned
+  :class:`KernelProfile` JSON;
+* ``report``   — render the bottleneck-attribution report from recorded
+  tuning-space datasets and/or saved profile documents
+  (byte-deterministic — the CI ``cmp`` gate);
+* ``roofline`` — print a device's roofline (peaks, ridge points) and,
+  given a scenario, where its configs sit;
+* ``diff``     — compare two saved profile documents (latency deltas,
+  bottleneck changes);
+* ``demo``     — run the instrumented demo and write every artifact.
+
+Every command is deterministic given its inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob as _glob
+import json
+import sys
+
+from repro.core.device import get_device
+
+from .profile import profile_from_workload
+from .profiler import load_profiles
+from .report import render_attribution, render_profiles
+
+
+def _parse_config(raw: str | None) -> dict | None:
+    if not raw:
+        return None
+    out = {}
+    for part in raw.split(","):
+        k, _, v = part.partition("=")
+        if not _:
+            raise SystemExit(f"bad --config item {part!r} (want key=value)")
+        try:
+            out[k.strip()] = int(v)
+        except ValueError:
+            out[k.strip()] = v.strip()
+    return out
+
+
+def _problem(raw: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in raw.split(",") if x)
+
+
+def _load_datasets(pattern: str):
+    from repro.tunebench.dataset import SpaceDataset
+    paths = sorted(_glob.glob(pattern))
+    return [SpaceDataset.load(p) for p in paths]
+
+
+def _cmd_profile(args) -> int:
+    from repro.core.registry import get_kernel
+    from repro.tuner.costmodel import CostModel
+
+    builder = get_kernel(args.kernel)
+    problem = _problem(args.problem)
+    device = get_device(args.device)
+    config = _parse_config(args.config) or builder.default_config()
+    w = builder.make_workload(config, problem, args.dtype)
+    if not w.valid:
+        print(f"config {config} is infeasible for {problem}")
+        return 1
+    if args.latency_us is not None:
+        latency = float(args.latency_us)
+    else:
+        key = "|".join(f"{k}={config[k]}" for k in sorted(config))
+        key += f"|{problem}|{args.dtype}"
+        latency = CostModel(device).time(w, args.dtype,
+                                         noise_key=key) * 1e6
+    p = profile_from_workload(w, device, args.dtype, latency,
+                              kernel=builder.name, problem_size=problem,
+                              config=config)
+    doc = json.dumps(p.to_json(), indent=2, sort_keys=True)
+    print(doc)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(doc + "\n")
+    print(f"# {p.bottleneck}-bound, roofline fraction "
+          f"{p.roofline_fraction:.3f}, AI {p.arithmetic_intensity:.2f}",
+          file=sys.stderr)
+    return 0
+
+
+def _cmd_report(args) -> int:
+    datasets = _load_datasets(args.datasets) if args.datasets else []
+    profiles = []
+    for path in args.profiles:
+        profiles.extend(load_profiles(path))
+    parts = []
+    if profiles:
+        parts.append(render_profiles(profiles))
+    if datasets or not profiles:
+        parts.append(render_attribution(datasets,
+                                        rerank=not args.no_rerank))
+    text = "\n".join(parts)
+    sys.stdout.write(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    return 0
+
+
+def _cmd_roofline(args) -> int:
+    device = get_device(args.device)
+    vpu_f32 = device.flops_f32 / 8.0
+    rows = [
+        ("peak bf16 (MXU)", f"{device.flops_bf16 / 1e12:.1f} TFLOP/s"),
+        ("peak f32 (MXU)", f"{device.flops_f32 / 1e12:.1f} TFLOP/s"),
+        ("peak f32 (VPU)", f"{vpu_f32 / 1e12:.2f} TFLOP/s"),
+        ("HBM bandwidth", f"{device.hbm_bw / 1e9:.0f} GB/s"),
+        ("ICI bandwidth", f"{device.ici_bw / 1e9:.0f} GB/s"),
+        ("VMEM", f"{device.vmem_bytes // 2**20} MiB"),
+        ("ridge AI bf16", f"{device.flops_bf16 / device.hbm_bw:.1f} "
+                          f"FLOP/byte"),
+        ("ridge AI f32", f"{device.flops_f32 / device.hbm_bw:.1f} "
+                         f"FLOP/byte"),
+        ("ridge AI f32 VPU", f"{vpu_f32 / device.hbm_bw:.1f} FLOP/byte"),
+    ]
+    print(f"roofline: {device.kind} (family {device.family})")
+    for k, v in rows:
+        print(f"  {k:18} {v}")
+    if args.kernel:
+        from repro.core.registry import get_kernel
+        builder = get_kernel(args.kernel)
+        problem = _problem(args.problem)
+        config = _parse_config(args.config) or builder.default_config()
+        w = builder.make_workload(config, problem, args.dtype)
+        p = profile_from_workload(w, device, args.dtype, 0.0,
+                                  kernel=builder.name,
+                                  problem_size=problem, config=config)
+        print(f"  {builder.name} @ {problem} {args.dtype}: "
+              f"AI={p.arithmetic_intensity:.2f} -> {p.bottleneck}-bound "
+              f"(compute {p.compute_us:.3f}us vs memory "
+              f"{p.memory_us:.3f}us)")
+    return 0
+
+
+def _cmd_diff(args) -> int:
+    a = {(p.kernel, p.device_kind, p.problem_size, p.dtype): p
+         for p in load_profiles(args.a)}
+    b = {(p.kernel, p.device_kind, p.problem_size, p.dtype): p
+         for p in load_profiles(args.b)}
+    changed = 0
+    for key in sorted(set(a) | set(b)):
+        ka = a.get(key)
+        kb = b.get(key)
+        name = f"{key[0]} {key[1]}|{'x'.join(map(str, key[2]))}|{key[3]}"
+        if ka is None or kb is None:
+            print(f"{name}: only in {'b' if ka is None else 'a'}")
+            changed += 1
+            continue
+        ratio = (kb.latency_us / ka.latency_us
+                 if ka.latency_us > 0 else float("inf"))
+        mark = ""
+        if kb.bottleneck != ka.bottleneck:
+            mark += f" bottleneck {ka.bottleneck}->{kb.bottleneck}"
+        if abs(ratio - 1.0) > args.tolerance:
+            mark += f" latency x{ratio:.3f}"
+        if mark:
+            print(f"{name}:{mark}")
+            changed += 1
+        else:
+            print(f"{name}: unchanged (x{ratio:.3f})")
+    print(f"{changed} profile(s) changed")
+    return 1 if (changed and args.check) else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.prof",
+        description="kernel profiles: roofline counters, bottleneck "
+                    "attribution, profile-guided tuning")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("profile", help="profile one kernel scenario")
+    p.add_argument("--kernel", required=True)
+    p.add_argument("--problem", required=True,
+                   help="comma-separated problem size, e.g. 256,256,256")
+    p.add_argument("--dtype", default="float32")
+    p.add_argument("--device", default="tpu-v5e")
+    p.add_argument("--config", help="key=value,... (default: the "
+                                    "kernel's default config)")
+    p.add_argument("--latency-us", type=float,
+                   help="measured latency; default: simulate via the "
+                        "cost model")
+    p.add_argument("--out", help="also write the profile JSON here")
+
+    p = sub.add_parser("report",
+                       help="bottleneck-attribution report "
+                            "(byte-deterministic)")
+    p.add_argument("--datasets",
+                   default="benchmarks/datasets/*.space.json",
+                   help="recorded tuning-space glob (default: the "
+                        "shipped spaces)")
+    p.add_argument("--profiles", nargs="*", default=[],
+                   help="saved .prof.json documents to summarize")
+    p.add_argument("--no-rerank", action="store_true",
+                   help="skip the surrogate comparison section")
+    p.add_argument("--out", help="also write the report to this path")
+
+    p = sub.add_parser("roofline", help="device roofline + ridge points")
+    p.add_argument("--device", default="tpu-v5e")
+    p.add_argument("--kernel", help="also place this kernel's config "
+                                    "on the roofline")
+    p.add_argument("--problem", default="256,256,256")
+    p.add_argument("--dtype", default="float32")
+    p.add_argument("--config")
+
+    p = sub.add_parser("diff", help="compare two profile documents")
+    p.add_argument("a")
+    p.add_argument("b")
+    p.add_argument("--tolerance", type=float, default=0.10,
+                   help="latency ratio considered unchanged "
+                        "(default 0.10)")
+    p.add_argument("--check", action="store_true",
+                   help="exit non-zero if anything changed")
+
+    p = sub.add_parser("demo", help="run the instrumented profiler demo")
+    p.add_argument("--out", default="prof-demo",
+                   help="artifact directory (default prof-demo)")
+    p.add_argument("--datasets",
+                   default="benchmarks/datasets/*.space.json")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "profile":
+        return _cmd_profile(args)
+    if args.cmd == "report":
+        return _cmd_report(args)
+    if args.cmd == "roofline":
+        return _cmd_roofline(args)
+    if args.cmd == "diff":
+        return _cmd_diff(args)
+    if args.cmd == "demo":
+        from .demo import run_demo
+        art = run_demo(args.out, dataset_glob=args.datasets)
+        for name in ("profiles", "trace", "snapshot", "report_path"):
+            print(f"{name}: {art[name]}")
+        print(f"profiles recorded: {art['n_profiles']} "
+              f"(drift events: {art['drift_events']})")
+        sys.stdout.write("\n" + art["report"])
+        return 0
+    raise AssertionError(f"unhandled command {args.cmd!r}")
+
+
+if __name__ == "__main__":          # pragma: no cover
+    raise SystemExit(main())

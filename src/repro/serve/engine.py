@@ -15,6 +15,7 @@ Greedy (argmax) or temperature sampling.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -83,7 +84,8 @@ class ServeReport:
 class ServeEngine:
     def __init__(self, model, params, n_slots: int = 4,
                  max_seq: int = 512, temperature: float = 0.0,
-                 rng_seed: int = 0, online=None, sync=None):
+                 rng_seed: int = 0, online=None, sync=None,
+                 profiler=None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -112,6 +114,21 @@ class ServeEngine:
         # and hot-refreshing attached kernels — this host serves with the
         # whole fleet's tuning results, not just its own.
         self.sync = sync
+        # Optional decode-step profiler (repro.prof.StepProfiler): every
+        # Nth step is timed to a blocking boundary and recorded as a
+        # "serve.decode" roofline profile (params streamed from HBM per
+        # step → small-batch decode is memory-bound; the profile says by
+        # how much, and drifts against the run's first sampled step).
+        # Unsampled steps pay one None check — no extra block/clock.
+        self.profiler = profiler
+        if profiler is None:
+            from repro.prof.profiler import (StepProfiler,
+                                             process_profiler)
+            ambient = process_profiler()
+            if ambient is not None:
+                self.profiler = StepProfiler(ambient)
+        if self.profiler is not None:
+            self.profiler.bind(params, n_slots, max_seq)
 
     def submit(self, req: Request) -> bool:
         ok = self.batcher.submit(req.request_id, len(req.prompt),
@@ -141,8 +158,18 @@ class ServeEngine:
             next_tok[slot, 0] = req.prompt[0]
         t = 0
         while not all(done.values()) and t < self.max_seq - 1:
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(next_tok))
+            prof = self.profiler
+            if prof is not None and prof.due(self.steps_run):
+                # Sampled step: time to a blocking boundary. Only these
+                # steps pay the extra sync; the rest overlap as before.
+                t0 = time.perf_counter()
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(next_tok))
+                logits = jax.block_until_ready(logits)
+                prof.on_step((time.perf_counter() - t0) * 1e6)
+            else:
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(next_tok))
             self.steps_run += 1
             m = obs.metrics()
             if m is not None:

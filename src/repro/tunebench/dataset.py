@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import json
 import os
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Iterable, Sequence
 
@@ -87,14 +87,20 @@ class SpaceEvaluation:
     ``numerics-mismatch`` — see :mod:`repro.sandbox.verdict`), so a
     replayed space remembers *how* a config failed, not just that it
     did; benchmarks charge strategies for re-proposing known-fatal
-    configs. Empty for ordinary entries and omitted from JSON, keeping
-    previously recorded datasets byte-identical."""
+    configs. ``profile`` optionally carries the roofline counters the
+    profiler attached to the evaluation (:func:`repro.prof.profile_fields`
+    — FLOPs, HBM bytes, roofline time terms, bottleneck class), which is
+    what lets :func:`repro.tuner.costmodel.fit_from_dataset` learn from
+    hardware structure instead of raw config coordinates. Both are
+    empty for ordinary entries and omitted from JSON, keeping previously
+    recorded datasets byte-identical."""
 
     config: Config
     score_us: float
     status: str
     error: str = ""
     verdict: str = ""
+    profile: dict = field(default_factory=dict)
 
     @property
     def feasible(self) -> bool:
@@ -106,6 +112,8 @@ class SpaceEvaluation:
                "status": self.status, "error": self.error}
         if self.verdict:
             out["verdict"] = self.verdict
+        if self.profile:
+            out["profile"] = dict(self.profile)
         return out
 
     @staticmethod
@@ -116,7 +124,8 @@ class SpaceEvaluation:
             score_us=(_INFEASIBLE if score is None else float(score)),
             status=str(d.get("status", "ok")),
             error=str(d.get("error", "")),
-            verdict=str(d.get("verdict", "")))
+            verdict=str(d.get("verdict", "")),
+            profile=dict(d.get("profile", {})))
 
 
 class SpaceDataset:
@@ -179,13 +188,14 @@ class SpaceDataset:
     # -- mutation ------------------------------------------------------------
 
     def add(self, config: Config, score_us: float, status: str,
-            error: str = "", verdict: str = "") -> None:
+            error: str = "", verdict: str = "",
+            profile: dict | None = None) -> None:
         """Record one evaluation. Re-recording the same config keeps the
         better outcome (an ``"ok"`` score always beats infeasible; two
         ok scores keep the lower), so repeated sessions only sharpen the
         dataset and recording stays deterministic in any order."""
         ev = SpaceEvaluation(dict(config), float(score_us), status, error,
-                             verdict)
+                             verdict, dict(profile or {}))
         key = self.key_for(config)
         cur = self.evaluations.get(key)
         if cur is not None:
@@ -205,7 +215,8 @@ class SpaceDataset:
             verdict = ""
         self.add(config, result.score_us,
                  "ok" if result.feasible else "infeasible",
-                 error=result.error, verdict=verdict)
+                 error=result.error, verdict=verdict,
+                 profile=result.info.get("profile"))
 
     # -- queries -------------------------------------------------------------
 

@@ -173,6 +173,16 @@ class FittedCostModel:
     ``baseline_rmse_log`` (a constant predictor) to judge whether the
     fit learned anything.
 
+    When fitted with ``profile_features=True`` (see
+    :func:`fit_from_dataset`) the design matrix additionally carries the
+    roofline counters the profiler recorded per config
+    (:data:`repro.prof.profile.PROFILE_FEATURES`); predictions look the
+    config's counters up by its stable hash (``profile_lookup``), so the
+    surrogate generalizes from *hardware structure* — a config's
+    predicted compute/memory time terms — rather than raw coordinates.
+    Configs the dataset never profiled contribute zero columns, which
+    the centered regression treats as "no extra information".
+
     Example::
 
         model = fit_from_dataset(SpaceDataset.load("matmul.space.json"))
@@ -186,10 +196,19 @@ class FittedCostModel:
     baseline_rmse_log: float
     n_samples: int = 0
     _dim: int = field(default=0)
+    profile_lookup: dict | None = None
+    n_profile_features: int = 0
 
     def _features(self, config: Config) -> np.ndarray:
         u = self.space.to_unit(config)
-        return np.concatenate([[1.0], u, u * u])
+        base = np.concatenate([[1.0], u, u * u])
+        if self.profile_lookup is None:
+            return base
+        extra = self.profile_lookup.get(
+            self.space.freeze(config))
+        if extra is None:
+            extra = np.zeros(self.n_profile_features)
+        return np.concatenate([base, extra])
 
     def predict(self, config: Config) -> float:
         """Predicted objective value (microseconds) for ``config``."""
@@ -213,7 +232,8 @@ class FittedCostModel:
                                   / self.baseline_rmse_log)))
 
 
-def fit_from_dataset(dataset, ridge: float = 1e-3) -> FittedCostModel:
+def fit_from_dataset(dataset, ridge: float = 1e-3,
+                     profile_features: bool = False) -> FittedCostModel:
     """Fit a :class:`FittedCostModel` from a recorded space.
 
     ``dataset`` is any object with the :class:`~repro.tunebench.SpaceDataset`
@@ -221,10 +241,17 @@ def fit_from_dataset(dataset, ridge: float = 1e-3) -> FittedCostModel:
     feasible entry. Raises ``ValueError`` with fewer than 3 feasible
     evaluations — below that a surrogate is noise.
 
+    ``profile_features=True`` appends each entry's recorded roofline
+    counters (``entry.profile``, written by the always-on profiler in
+    the tuner evaluators) as extra regression columns — the
+    profile-guided surrogate. Datasets recorded before the profiler
+    existed fit exactly as without the flag (all-zero columns carry no
+    signal), so the flag is always safe to pass.
+
     Example::
 
         ds = SpaceDataset.load("datasets/matmul--....space.json")
-        model = fit_from_dataset(ds)
+        model = fit_from_dataset(ds, profile_features=True)
         model.predict({"block_m": 128, ...})
     """
     feas = dataset.feasible()
@@ -234,6 +261,19 @@ def fit_from_dataset(dataset, ridge: float = 1e-3) -> FittedCostModel:
     space = dataset.space()
     x = np.stack([np.concatenate([[1.0], u, u * u]) for u in
                   (space.to_unit(e.config) for e in feas)])
+    lookup = None
+    n_prof = 0
+    if profile_features:
+        # Import here: repro.prof depends on core only, but keeping the
+        # tuner importable without it preserves layer independence.
+        from repro.prof.profile import (PROFILE_FEATURES,
+                                        profile_feature_vector)
+        n_prof = len(PROFILE_FEATURES)
+        cols = np.array([profile_feature_vector(
+            getattr(e, "profile", None) or {}) for e in feas])
+        x = np.concatenate([x, cols], axis=1)
+        lookup = {space.freeze(e.config): cols[i]
+                  for i, e in enumerate(feas)}
     y = np.log(np.array([e.score_us for e in feas]))
     mean_log = float(y.mean())
     yc = y - mean_log
@@ -247,4 +287,5 @@ def fit_from_dataset(dataset, ridge: float = 1e-3) -> FittedCostModel:
         space=space, weights=weights, mean_log=mean_log,
         rmse_log=float(np.sqrt(np.mean(resid**2))),
         baseline_rmse_log=float(np.sqrt(np.mean(yc**2))),
-        n_samples=len(feas), _dim=dim)
+        n_samples=len(feas), _dim=dim,
+        profile_lookup=lookup, n_profile_features=n_prof)

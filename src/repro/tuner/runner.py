@@ -23,8 +23,9 @@ import jax
 import numpy as np
 
 from repro.core.builder import KernelBuilder, args_meta
-from repro.core.device import DeviceSpec, get_device
+from repro.core.device import DeviceSpec, current_device_kind, get_device
 from repro.core.param import Config
+from repro.prof.profile import profile_fields, profile_from_workload
 
 from .costmodel import CostModel, INFEASIBLE
 
@@ -224,9 +225,17 @@ class CostModelEvaluator:
                 return self._record(
                     config, EvalResult(INFEASIBLE, False, verified=False,
                                        error=msg))
+        # Always-on profiling: in the tuner the workload is already in
+        # hand, so joining it with the score costs one pure function
+        # call — every recorded dataset entry gains roofline counters.
+        p = profile_from_workload(
+            w, self.device, self.dtype, t * 1e6,
+            kernel=self.builder.name, problem_size=self.problem,
+            config=config)
         return self._record(
             config, EvalResult(t * 1e6, True, verified=verified,
-                               info={"workload": w}))
+                               info={"workload": w,
+                                     "profile": profile_fields(p)}))
 
 
 class WallClockEvaluator:
@@ -286,9 +295,21 @@ class WallClockEvaluator:
                 t0 = time.perf_counter()
                 jax.block_until_ready(compiled(*self.args))
                 times.append(time.perf_counter() - t0)
+            score_us = min(times) * 1e6
+            info: dict = {}
+            if self.builder._workload is not None:
+                problem = self.builder.get_problem_size(*meta)
+                dtype = self.builder.get_dtype(*meta)
+                w = self.builder.make_workload(config, problem, dtype)
+                p = profile_from_workload(
+                    w, get_device(current_device_kind()), dtype, score_us,
+                    kernel=self.builder.name, problem_size=problem,
+                    config=config)
+                info["profile"] = profile_fields(p)
             return self._record(
-                config, EvalResult(min(times) * 1e6, True,
-                                   verified=True if self.verify else None))
+                config, EvalResult(score_us, True,
+                                   verified=True if self.verify else None,
+                                   info=info))
         except Exception as e:  # noqa: BLE001
             return self._record(
                 config, EvalResult(INFEASIBLE, False,

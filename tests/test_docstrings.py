@@ -10,6 +10,7 @@ import inspect
 import pytest
 
 import repro.fleet
+import repro.prof
 import repro.sandbox
 import repro.transfer
 import repro.tunebench
@@ -21,6 +22,7 @@ MODULES = {
     "repro.tunebench": (repro.tunebench, False),   # docstring only
     "repro.transfer": (repro.transfer, False),     # docstring only
     "repro.sandbox": (repro.sandbox, True),
+    "repro.prof": (repro.prof, True),
 }
 
 

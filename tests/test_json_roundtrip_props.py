@@ -1,8 +1,9 @@
-"""Property-based round-trip guarantees for the two on-disk JSON schemas
-(ISSUE 5 satellite): arbitrary *valid* wisdom records and dataset entries
-must survive ``migrate_doc`` / ``migrate_dataset_doc`` plus a full
-serialize -> deserialize -> serialize cycle byte-identically. Runs under
-real ``hypothesis`` when installed, else the deterministic compat shim
+"""Property-based round-trip guarantees for the on-disk JSON schemas
+(ISSUE 5 satellite, extended with kernel profiles in ISSUE 8): arbitrary
+*valid* wisdom records, dataset entries, and kernel profiles must
+survive their migrations plus a full serialize -> deserialize ->
+serialize cycle byte-identically. Runs under real ``hypothesis`` when
+installed, else the deterministic compat shim
 (``tests/_hypothesis_compat.py``)."""
 
 import json
@@ -151,3 +152,61 @@ def test_versionless_dataset_doc_migration_is_stable(data):
     assert once["version"] == 1
     assert canon(migrate_dataset_doc(once)) == canon(once)
     assert "version" not in doc        # input not mutated
+
+
+# ------------------------------ kernel profiles ------------------------------
+
+def profile_strategy_draw(data) -> "KernelProfile":
+    from repro.core.workload import Workload
+    from repro.prof import profile_from_workload
+    from repro.core.device import DEVICES as DEVICE_SPECS
+
+    device = data.draw(st.sampled_from(sorted(DEVICE_SPECS)))
+    w = Workload(
+        flops=data.draw(st.floats(1.0, 1e15)),
+        hbm_bytes=data.draw(st.floats(1.0, 1e12)),
+        vmem_bytes=data.draw(st.integers(0, 64 * 2**20)),
+        grid=data.draw(st.integers(1, 1 << 20)))
+    n_cfg = data.draw(st.integers(0, 3))
+    config = {KEYS[i]: data.draw(st.integers(1, 512)) for i in range(n_cfg)}
+    baseline = (data.draw(st.floats(1e-3, 1e6))
+                if data.draw(st.booleans()) else None)
+    return profile_from_workload(
+        w, DEVICE_SPECS[device], data.draw(st.sampled_from(DTYPES)),
+        data.draw(st.floats(1e-3, 1e7)),
+        kernel=data.draw(st.sampled_from(["matmul", "advec_u", "k"])),
+        problem_size=tuple(data.draw(st.lists(st.integers(1, 8192),
+                                              min_size=0, max_size=4))),
+        config=config,
+        tier=data.draw(st.sampled_from(["", "exact", "trial", "serve"])),
+        collective_bytes=data.draw(st.floats(0.0, 1e12)),
+        baseline_us=baseline)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_kernel_profile_roundtrips_byte_identically(data):
+    """Arbitrary valid profiles survive a full serialize -> deserialize ->
+    serialize cycle byte-identically, classification and drift stay
+    stable, and future schema versions are refused (ISSUE 8 satellite)."""
+    from repro.prof import (BOTTLENECKS, PROFILE_VERSION, KernelProfile,
+                            ProfileVersionError)
+
+    p = profile_strategy_draw(data)
+    assert p.bottleneck in BOTTLENECKS
+    doc = p.to_json()
+    assert doc["version"] == PROFILE_VERSION
+    assert ("baseline_us" in doc) == (p.baseline_us is not None)
+
+    wire = json.loads(json.dumps(doc))
+    back = KernelProfile.from_json(wire)
+    assert canon(back.to_json()) == canon(doc)
+    assert back.bottleneck == p.bottleneck
+    assert back.has_drift() == KernelProfile.from_json(doc).has_drift()
+
+    future = dict(doc, version=PROFILE_VERSION + 1)
+    try:
+        KernelProfile.from_json(future)
+        raise AssertionError("future profile version accepted")
+    except ProfileVersionError:
+        pass

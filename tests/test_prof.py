@@ -1,0 +1,493 @@
+"""Kernel profiler: roofline counters, bottleneck attribution, sampled
+launch-path profiling, drift detection, and profile-guided tuning.
+
+The contracts under test are the ones the CI ``prof-smoke`` job and the
+strategy-bench gate lean on: profiles round-trip byte-exactly and refuse
+future schema versions, classification reproduces the device physics
+(small matmul memory-bound, serving-scale matmul compute-bound, stencils
+memory-bound), sampling touches the hot path only through one branch per
+launch, recorded datasets carry per-config profile fields, and the
+profile-guided surrogate never ranks worse than plain ridge on the
+shipped spaces.
+"""
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import Wisdom, WisdomRecord, get_kernel, make_provenance
+from repro.core.builder import KernelBuilder
+from repro.core.device import get_device
+from repro.obs import Tracer, validate_trace
+from repro.obs import runtime
+from repro.prof import (DEFAULT_SAMPLE_EVERY, PROFILE_FEATURES,
+                        PROFILE_VERSION, KernelProfile, Profiler,
+                        ProfileVersionError, StepProfiler,
+                        classify_bottleneck, classify_dataset,
+                        load_profiles, process_profiler, prof_requested,
+                        profile_feature_vector, profile_fields,
+                        profile_from_workload, render_attribution,
+                        render_profiles, rerank_gate,
+                        reset_process_profiler, save_profiles,
+                        summarize, surrogate_rerank)
+
+DATASET_DIR = Path(__file__).resolve().parents[1] / "benchmarks" / "datasets"
+ADVEC_PATH = DATASET_DIR / "advec_u--tpu-v5e--64x64x128--float32.space.json"
+MATMUL_BIG = DATASET_DIR / "matmul--tpu-v5e--8192x8192x8192--float32.space.json"
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    """Profiler tests start and end with obs off and no ambient profiler."""
+    runtime.disable()
+    reset_process_profiler()
+    os.environ.pop("KERNEL_LAUNCHER_PROF", None)
+    yield
+    runtime.disable()
+    reset_process_profiler()
+    os.environ.pop("KERNEL_LAUNCHER_PROF", None)
+
+
+def _matmul_profile(latency_us=100.0, baseline_us=None,
+                    problem=(256, 256, 256), config=None):
+    builder = get_kernel("matmul")
+    config = config or builder.default_config()
+    w = builder.make_workload(config, problem, "float32")
+    return profile_from_workload(
+        w, get_device("tpu-v5e"), "float32", latency_us, kernel="matmul",
+        problem_size=problem, config=config, tier="exact",
+        baseline_us=baseline_us)
+
+
+# ------------------------- classification physics ----------------------------
+
+def test_classify_bottleneck_ordering_and_ties():
+    assert classify_bottleneck(2.0, 1.0) == "compute"
+    assert classify_bottleneck(1.0, 2.0) == "memory"
+    assert classify_bottleneck(0.0, 1.0, 3.0) == "collective"
+    # ties resolve in declaration order: compute, then memory
+    assert classify_bottleneck(1.0, 1.0) == "compute"
+    assert classify_bottleneck(0.0, 1.0, 1.0) == "memory"
+
+
+def test_small_matmul_is_memory_bound_serving_scale_is_compute_bound():
+    dev = get_device("tpu-v5e")
+    small = _matmul_profile()
+    assert small.bottleneck == "memory"
+    # no config in the space reaches the f32 ridge point at 256^3
+    assert small.arithmetic_intensity < dev.flops_f32 / dev.hbm_bw
+
+    big = _matmul_profile(
+        problem=(8192, 8192, 8192),
+        config={"block_m": 512, "block_n": 512, "block_k": 1024,
+                "grid_order": "nmk", "dim_semantics": "parallel"})
+    assert big.bottleneck == "compute"
+    assert big.arithmetic_intensity > dev.flops_f32 / dev.hbm_bw
+
+
+def test_advec_stencil_is_memory_bound():
+    builder = get_kernel("advec_u")
+    w = builder.make_workload(builder.default_config(), (64, 64, 128),
+                              "float32")
+    p = profile_from_workload(w, get_device("tpu-v5e"), "float32", 50.0,
+                              kernel="advec_u")
+    assert p.bottleneck == "memory"
+    assert p.arithmetic_intensity < 16.0
+
+
+def test_bf16_uses_bf16_peak():
+    builder = get_kernel("matmul")
+    cfg = builder.default_config()
+    w = builder.make_workload(cfg, (256, 256, 256), "bfloat16")
+    p = profile_from_workload(w, get_device("tpu-v5e"), "bfloat16", 100.0)
+    w32 = builder.make_workload(cfg, (256, 256, 256), "float32")
+    p32 = profile_from_workload(w32, get_device("tpu-v5e"), "float32", 100.0)
+    assert p.compute_us == pytest.approx(p32.compute_us / 2, rel=1e-6)
+
+
+# ------------------------------ round-trips ----------------------------------
+
+def test_profile_json_roundtrip_and_version_refusal():
+    p = _matmul_profile(baseline_us=80.0)
+    d = p.to_json()
+    assert d["version"] == PROFILE_VERSION
+    back = KernelProfile.from_json(d)
+    assert back.to_json() == d
+    assert back.drift == pytest.approx(100.0 / 80.0, rel=1e-4)
+
+    future = dict(d, version=PROFILE_VERSION + 1)
+    with pytest.raises(ProfileVersionError):
+        KernelProfile.from_json(future)
+
+
+def test_baseline_omitted_when_absent():
+    d = _matmul_profile().to_json()
+    assert "baseline_us" not in d and "drift" not in d
+
+
+def test_save_load_profiles_roundtrip(tmp_path):
+    ps = [_matmul_profile(50.0), _matmul_profile(60.0, baseline_us=50.0)]
+    path = save_profiles(tmp_path / "x.prof.json", ps)
+    back = load_profiles(path)
+    assert [p.to_json() for p in back] == [p.to_json() for p in ps]
+    # byte-determinism of the document itself
+    again = save_profiles(tmp_path / "y.prof.json", ps)
+    assert path.read_bytes() == again.read_bytes()
+
+    bad = {"version": 1, "profiles": [
+        dict(ps[0].to_json(), version=PROFILE_VERSION + 7)]}
+    (tmp_path / "bad.prof.json").write_text(json.dumps(bad))
+    with pytest.raises(ProfileVersionError):
+        load_profiles(tmp_path / "bad.prof.json")
+
+
+# ------------------------------ drift ----------------------------------------
+
+def test_drift_detection_threshold():
+    slow = _matmul_profile(100.0, baseline_us=50.0)
+    assert slow.drift == pytest.approx(2.0)
+    assert slow.has_drift()
+    ok = _matmul_profile(60.0, baseline_us=50.0)
+    assert not ok.has_drift()          # 1.2x < default 1.5x
+    assert ok.has_drift(threshold=1.1)
+    assert not _matmul_profile(100.0).has_drift()   # no baseline, no drift
+
+
+# ------------------------------ sampling -------------------------------------
+
+def test_profiler_sampling_period():
+    pr = Profiler(sample_every=4)
+    hits = [pr.due("matmul") for _ in range(9)]
+    assert hits == [True, False, False, False, True,
+                    False, False, False, True]
+    # independent streams sample independently
+    assert pr.due("advec_u")
+
+
+def test_profiler_bounds_retained_profiles():
+    pr = Profiler(sample_every=1, max_profiles=4)
+    for i in range(10):
+        pr.record(_matmul_profile(float(i + 1)))
+    assert len(pr.profiles) == 4
+    assert pr.dropped > 0
+    assert pr.profiles[-1].latency_us == 10.0
+
+
+def test_profile_launch_guards_never_raise():
+    pr = Profiler(sample_every=1)
+    bare = KernelBuilder("bare")           # no workload hook
+    assert pr.profile_launch(bare, {}, (8,), "float32", "tpu-v5e",
+                             1.0) is None
+    builder = get_kernel("matmul")
+    # 96 % 64 != 0 -> the workload hook marks the config infeasible
+    bad = dict(builder.default_config(), block_m=64)
+    assert pr.profile_launch(builder, bad, (96, 96, 96), "float32",
+                             "tpu-v5e", 1.0) is None
+    assert pr.profiles == []
+
+
+def test_prof_requested_env_parsing(monkeypatch):
+    monkeypatch.delenv("KERNEL_LAUNCHER_PROF", raising=False)
+    assert prof_requested() == 0
+    for raw, want in [("0", 0), ("off", 0), ("false", 0),
+                      ("1", DEFAULT_SAMPLE_EVERY),
+                      ("true", DEFAULT_SAMPLE_EVERY),
+                      ("4", 4), ("-3", 1),
+                      ("garbage", DEFAULT_SAMPLE_EVERY)]:
+        monkeypatch.setenv("KERNEL_LAUNCHER_PROF", raw)
+        assert prof_requested() == want, raw
+
+
+def test_process_profiler_lifecycle(monkeypatch):
+    monkeypatch.delenv("KERNEL_LAUNCHER_PROF", raising=False)
+    reset_process_profiler()
+    assert process_profiler() is None
+    monkeypatch.setenv("KERNEL_LAUNCHER_PROF", "8")
+    reset_process_profiler()
+    pr = process_profiler()
+    assert pr is not None and pr.sample_every == 8
+    assert process_profiler() is pr        # one shared instance
+
+
+# ------------------------- telemetry fan-out ---------------------------------
+
+def test_record_emits_metrics_and_counter_events():
+    reg, tr = runtime.enable()
+    pr = Profiler(sample_every=1)
+    pr.record(_matmul_profile(100.0))
+    pr.record(_matmul_profile(200.0, baseline_us=50.0))   # 4x drift
+    assert pr.drift_events == 1
+    snap = reg.snapshot()
+    assert snap["counters"][
+        "prof.launches{bottleneck=memory,kernel=matmul}"] == 2
+    assert snap["counters"]["prof.drift{kernel=matmul}"] == 1
+    doc = tr.to_chrome()
+    assert validate_trace(doc) == []
+    counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    assert len(counters) == 2
+    assert counters[0]["name"] == "prof.matmul"
+    assert set(counters[0]["args"]) >= {"roofline_fraction",
+                                        "arithmetic_intensity"}
+    assert any(e["ph"] == "i" and e["name"] == "prof.drift"
+               for e in doc["traceEvents"])
+
+
+def test_validate_trace_counter_events():
+    base = {"name": "c", "cat": "p", "ph": "C", "ts": 1.0,
+            "pid": 1, "tid": 1}
+    good = {**base, "args": {"frac": 0.5}}
+    assert validate_trace({"traceEvents": [good]}) == []
+    for bad_args in ({}, {"frac": "high"}, {"frac": True}):
+        errors = validate_trace(
+            {"traceEvents": [{**base, "args": bad_args}]})
+        assert errors, bad_args
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        tr.counter("prof.matmul", frac="high")
+    with pytest.raises(ValueError):
+        tr.counter("prof.matmul")
+
+
+# --------------------------- launch-path wiring ------------------------------
+
+def test_wisdom_kernel_samples_launches_with_exact_baseline(tmp_path):
+    builder = get_kernel("matmul")
+    w = Wisdom("matmul")
+    w.add(WisdomRecord(
+        device_kind="tpu-v5e", device_family="tpu-v5",
+        problem_size=(64, 64, 64), dtype="float32",
+        config=builder.default_config(), score_us=12.0,
+        provenance=make_provenance()))
+    w.save(tmp_path)
+
+    from repro.core import WisdomKernel
+    k = WisdomKernel(get_kernel("matmul"), wisdom_dir=tmp_path,
+                     device_kind="tpu-v5e", backend="reference")
+    assert k.profiler is None              # detached by default
+    pr = Profiler(sample_every=2)
+    k.attach_profiler(pr)
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 64)).astype(np.float32)
+    for _ in range(4):
+        k(a, b)
+    assert len(pr.profiles) == 2           # launches 0 and 2 sampled
+    for p in pr.profiles:
+        assert p.kernel == "matmul" and p.tier == "exact"
+        assert p.baseline_us == 12.0       # the wisdom-recorded score
+        assert p.problem_size == (64, 64, 64)
+
+
+def test_wisdom_kernel_ambient_profiler_from_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("KERNEL_LAUNCHER_PROF", "2")
+    reset_process_profiler()
+    from repro.core import WisdomKernel
+    k = WisdomKernel(get_kernel("matmul"), wisdom_dir=tmp_path,
+                     device_kind="tpu-v5e", backend="reference")
+    assert k.profiler is process_profiler()
+    a = np.ones((64, 64), np.float32)
+    k(a, a)
+    assert len(k.profiler.profiles) == 1
+    assert k.profiler.profiles[0].baseline_us is None   # default tier
+
+
+def test_serve_engine_profiles_decode_steps():
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import Request, ServeEngine
+
+    class Toy:
+        vocab = 13
+
+        def init_cache(self, n, m):
+            return {"pos": jnp.zeros((), jnp.int32)}
+
+        def decode_step(self, params, cache, tok):
+            logits = jax.nn.one_hot((tok[:, 0] + 1) % self.vocab,
+                                    self.vocab)[:, None]
+            return logits, {"pos": cache["pos"] + 1}
+
+    params = {"w": np.ones((64, 64), np.float32)}
+    pr = Profiler(sample_every=2)
+    eng = ServeEngine(Toy(), params=params, n_slots=2, max_seq=16,
+                      profiler=StepProfiler(pr, device="tpu-v5e"))
+    for rid in range(2):
+        eng.submit(Request(rid, np.array([1, 2], np.int32),
+                           max_new_tokens=3))
+    rep = eng.run()
+    assert rep.steps > 0 and pr.profiles
+    first = pr.profiles[0]
+    assert first.kernel == "serve.decode" and first.tier == "serve"
+    assert first.bottleneck == "memory"    # params stream from HBM
+    assert first.hbm_bytes == 64 * 64 * 4
+    assert first.baseline_us is None       # first sample IS the baseline
+    assert all(p.baseline_us == first.latency_us
+               for p in pr.profiles[1:])
+    # engines without a profiler (and no env) stay detached
+    assert ServeEngine(Toy(), params={}).profiler is None
+
+
+# ------------------------ datasets + guided tuning ---------------------------
+
+def test_shipped_datasets_carry_profile_fields():
+    from repro.tunebench import SpaceDataset
+    ds = SpaceDataset.load(ADVEC_PATH)
+    feas = ds.feasible()
+    assert feas and all(e.profile.get("bottleneck") for e in feas)
+    c = classify_dataset(ds)
+    assert c["bottleneck"] == "memory"
+    assert c["distribution"] == {"memory": len(feas)}
+
+    big = classify_dataset(SpaceDataset.load(MATMUL_BIG))
+    assert big["bottleneck"] == "compute"
+    assert big["distribution"]["memory"] > big["distribution"]["compute"]
+
+
+def test_dataset_profile_field_roundtrips():
+    from repro.tunebench.dataset import SpaceEvaluation
+    e = SpaceEvaluation(config={"block": 8}, score_us=1.5, status="ok",
+                        profile={"bottleneck": "memory", "flops": 2.0})
+    d = e.to_json()
+    assert SpaceEvaluation.from_json(d).profile == e.profile
+    bare = SpaceEvaluation(config={"block": 8}, score_us=1.5, status="ok")
+    assert "profile" not in bare.to_json()   # byte-compat with old files
+
+
+def test_evaluator_profiles_every_config():
+    from repro.tuner.runner import CostModelEvaluator
+    builder = get_kernel("matmul")
+    ev = CostModelEvaluator(builder, (256, 256, 256), "float32",
+                            "tpu-v5e", verify="none")
+    res = ev(builder.default_config())
+    prof = res.info["profile"]
+    assert prof["bottleneck"] == "memory"
+    assert prof["flops"] == 2.0 * 256 ** 3
+
+
+def test_profile_feature_vector_tolerates_garbage():
+    assert profile_feature_vector({}) == [0.0] * len(PROFILE_FEATURES)
+    v = profile_feature_vector({"compute_us": "NaNsense", "grid": 0,
+                                "arithmetic_intensity": 42.0})
+    assert len(v) == len(PROFILE_FEATURES)
+    assert v[0] == 0.0 and v[3] == pytest.approx(np.log1p(42.0))
+
+
+def test_costmodel_accepts_profile_features():
+    from repro.tunebench import SpaceDataset
+    from repro.tuner.costmodel import fit_from_dataset
+    ds = SpaceDataset.load(ADVEC_PATH)
+    plain = fit_from_dataset(ds)
+    model = fit_from_dataset(ds, profile_features=True)
+    assert model.n_profile_features == len(PROFILE_FEATURES)
+    assert model.profile_lookup
+    cfg = ds.feasible()[0].config
+    assert np.isfinite(model.predict(cfg))
+    assert plain.profile_lookup is None
+
+
+def test_surrogate_rerank_gate_holds_on_shipped_space():
+    from repro.tunebench import SpaceDataset
+    r = surrogate_rerank(SpaceDataset.load(ADVEC_PATH))
+    names = [s["surrogate"] for s in r["surrogates"]]
+    assert names == ["ridge", "profile"]
+    for s in r["surrogates"]:
+        assert all(0.0 < f <= 1.0 for f in s["fraction_at"].values())
+    assert rerank_gate(r) == []            # profile never loses
+    from repro.core.param import ConfigSpace
+    tiny = SpaceDataset("k", ConfigSpace(), (1,), "float32", "tpu-v5e")
+    with pytest.raises(ValueError):
+        surrogate_rerank(tiny)             # too few feasible entries
+
+
+# ------------------------------ reporting ------------------------------------
+
+def test_render_attribution_is_deterministic():
+    from repro.tunebench import SpaceDataset
+    datasets = [SpaceDataset.load(ADVEC_PATH)]
+    a = render_attribution(datasets, rerank=False)
+    b = render_attribution(datasets, rerank=False)
+    assert a == b
+    assert "advec_u" in a and "memory-bound" in a
+
+
+def test_summarize_and_render_profiles():
+    ps = [_matmul_profile(100.0), _matmul_profile(300.0, baseline_us=100.0)]
+    s = summarize(ps)
+    assert s["matmul"]["launches"] == 2
+    assert s["matmul"]["dominant"] == "memory"
+    assert s["matmul"]["drifted"] == 1
+    text = render_profiles(ps)
+    assert "matmul: launches=2" in text and "drifted=1" in text
+    assert render_profiles([]) == render_profiles([])
+
+
+def test_health_report_renders_prof_and_sandbox_sections():
+    from repro.obs import MetricsRegistry, render_report
+    reg = MetricsRegistry()
+    snap0 = reg.snapshot()
+    assert "Profiler" not in render_report(snap0)   # sections are opt-in
+    reg.counter("sandbox.verdict", status="ok").inc(3)
+    reg.counter("oracle.checks", kernel="matmul", status="ok").inc(2)
+    reg.counter("prof.launches", kernel="matmul",
+                bottleneck="memory").inc(5)
+    reg.counter("prof.drift", kernel="matmul").inc()
+    text = render_report(reg.snapshot())
+    assert "Sandbox & oracle" in text
+    assert "sandbox verdicts: n=3 [ok=3]" in text
+    assert "oracle matmul: [ok=2]" in text
+    assert "Profiler (roofline bottlenecks)" in text
+    assert "matmul: profiled=5 memory-bound [memory=5]" in text
+    assert "drift-events=1" in text
+    assert render_report(reg.snapshot()) == text
+
+
+# ------------------------------ demo + CLI -----------------------------------
+
+def test_demo_produces_valid_artifacts(tmp_path):
+    from repro.prof.demo import run_demo
+    art = run_demo(tmp_path / "d")
+    assert art["n_profiles"] > 0 and art["drift_events"] >= 1
+    profiles = load_profiles(art["profiles"])
+    assert {p.kernel for p in profiles} >= {"matmul", "advec_u"}
+    trace = json.loads(Path(art["trace"]).read_text())
+    assert validate_trace(trace) == []
+    assert any(e["ph"] == "C" for e in trace["traceEvents"])
+    report = Path(art["report_path"]).read_text()
+    assert "Launch profiles" in report
+    assert "compute-bound" in report and "memory-bound" in report
+
+
+def test_cli_report_is_byte_deterministic(tmp_path):
+    from repro.prof.cli import main
+    glob_arg = str(ADVEC_PATH)
+    a, b = tmp_path / "a.txt", tmp_path / "b.txt"
+    assert main(["report", "--datasets", glob_arg, "--no-rerank",
+                 "--out", str(a)]) == 0
+    assert main(["report", "--datasets", glob_arg, "--no-rerank",
+                 "--out", str(b)]) == 0
+    assert a.read_bytes() == b.read_bytes()
+    assert "memory-bound" in a.read_text()
+
+
+def test_cli_profile_and_diff(tmp_path):
+    from repro.prof.cli import main
+    out = tmp_path / "p.prof.json"
+    assert main(["profile", "--kernel", "matmul",
+                 "--problem", "256,256,256", "--out", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert doc["bottleneck"] == "memory"
+    # simulated latency is deterministic
+    out2 = tmp_path / "q.prof.json"
+    main(["profile", "--kernel", "matmul", "--problem", "256,256,256",
+          "--out", str(out2)])
+    assert out.read_text() == out2.read_text()
+
+    ps = tmp_path / "s.prof.json"
+    save_profiles(ps, [_matmul_profile(100.0)])
+    assert main(["diff", str(ps), str(ps), "--check"]) == 0
+    slow = tmp_path / "slow.prof.json"
+    save_profiles(slow, [_matmul_profile(200.0)])
+    assert main(["diff", str(ps), str(slow), "--check"]) == 1
