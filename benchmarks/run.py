@@ -16,6 +16,12 @@
   (ours)   -> transfer_portability (held-out-device transfer: fraction of
                                   the hidden target optimum reached by
                                   transferred wisdom vs cold fallback)
+  (ours)   -> select_scaling      (wisdom select() p50 flat from 10^2 to
+                                  10^5 records; indexed == linear scan on
+                                  the shipped fixtures)
+  (ours)   -> serve_throughput    (token-level continuous batching vs
+                                  lock-step cohorts on a mixed-length
+                                  workload: steps + slot occupancy)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--json PATH] [module ...]
 
@@ -34,7 +40,8 @@ import time
 
 MODULES = ("capture_bench", "distribution", "tuning_session",
            "portability", "ppm", "overhead", "online_convergence",
-           "fleet_tuning", "strategy_bench", "transfer_portability")
+           "fleet_tuning", "strategy_bench", "transfer_portability",
+           "select_scaling", "serve_throughput")
 
 
 def rows_to_records(rows: list[str]) -> list[dict]:

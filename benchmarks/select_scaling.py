@@ -1,0 +1,196 @@
+"""Select-latency scaling gate: ``Wisdom.select`` must stay O(1) as the
+store grows (ISSUE 9; latency-regression gating motivated by the KTT
+autotuning benchmark-suite methodology).
+
+Two checks, both deterministic:
+
+* **Scaling**: populate synthetic wisdom stores of 10^2 → 10^5 records
+  (unique scenarios over a device/dtype/problem grid) and measure
+  exact-tier ``select_record`` latency. With the :class:`WisdomIndex`
+  the select cost is a few dict hops regardless of store size, so the
+  p50 at 10^5 records must stay within ``MAX_P50_RATIO`` (2x) of the
+  p50 at 10^2 — the pre-index linear scan fails this by ~three orders
+  of magnitude. Per size, the p50 is taken per measurement round and
+  the best round wins, which suppresses scheduler noise in CI.
+
+* **Equivalence**: on wisdom built from the shipped recorded-space
+  fixtures (``benchmarks/datasets/``) plus synthetic transferred
+  records, indexed ``select_record`` must return a byte-identical
+  (record_id, tier) to the historical linear scan
+  (``select_record_linear``) for every query in a grid of exact hits,
+  every fallback tier, confidence-gated transfers and default misses.
+  (The randomized version of this proof lives in
+  ``tests/test_wisdom_index_props.py``; this is the fixture-anchored
+  smoke the CI gate runs.)
+
+CSV: size, p50_us, ratio_vs_smallest, pass — then one equivalence row.
+``--check`` exits nonzero if any gate fails (the ``serve-smoke`` CI job).
+"""
+
+from __future__ import annotations
+
+import statistics
+import sys
+import time
+from pathlib import Path
+
+from repro.core.device import get_device
+from repro.core.wisdom import (Wisdom, WisdomRecord,
+                               make_transfer_provenance)
+
+try:
+    from .common import csv_row
+except ImportError:     # run as a plain script: python benchmarks/...py
+    def csv_row(*fields) -> str:
+        return ",".join(str(f) for f in fields)
+
+DATASET_DIR = Path(__file__).parent / "datasets"
+
+SIZES = (100, 1_000, 10_000, 100_000)
+MAX_P50_RATIO = 2.0
+ROUNDS = 5
+CALLS_PER_ROUND = 400
+
+_DEVICES = (("tpu-v5e", "tpu-v5"), ("tpu-v4", "tpu-v4"), ("cpu", "cpu"))
+_DTYPES = ("float32", "bfloat16", "float16", "int8")
+
+
+def synth_record(i: int) -> WisdomRecord:
+    """Deterministic synthetic record #i with a unique scenario."""
+    kind, family = _DEVICES[i % len(_DEVICES)]
+    dtype = _DTYPES[(i // len(_DEVICES)) % len(_DTYPES)]
+    # Spread problem sizes so fallback-tier distances are non-trivial.
+    m = 8 << (i % 11)
+    n = 8 << ((i // 11) % 11)
+    k = 8 + i // 121
+    return WisdomRecord(
+        device_kind=kind, device_family=family,
+        problem_size=(m, n, k), dtype=dtype,
+        config={"block_m": 64, "block_n": 128, "seq": i},
+        score_us=float(1 + (i % 997)),
+        provenance={"strategy": "synthetic", "evaluations": 64})
+
+
+def synth_wisdom(n: int) -> Wisdom:
+    return Wisdom("synthetic", [synth_record(i) for i in range(n)])
+
+
+def measure_p50(wisdom: Wisdom, queries) -> float:
+    """Best-of-rounds p50 select latency in microseconds."""
+    wisdom.select_record(*queries[0])       # warm: build the index once
+    round_p50s = []
+    for _ in range(ROUNDS):
+        times = []
+        for j in range(CALLS_PER_ROUND):
+            q = queries[j % len(queries)]
+            t0 = time.perf_counter()
+            wisdom.select_record(*q)
+            times.append(time.perf_counter() - t0)
+        round_p50s.append(statistics.median(times))
+    return min(round_p50s) * 1e6
+
+
+def scaling_rows():
+    """[(size, p50_us)] for each synthetic store size."""
+    out = []
+    for size in SIZES:
+        wisdom = synth_wisdom(size)
+        # Exact-tier queries spread across the store (the serve hot path).
+        step = max(1, size // 64)
+        queries = [(r.device_kind, r.problem_size, r.dtype)
+                   for r in wisdom.records[::step]]
+        out.append((size, measure_p50(wisdom, queries)))
+    return out
+
+
+def fixture_wisdom() -> Wisdom:
+    """Wisdom over the shipped recorded-space fixtures: every feasible
+    entry of every dataset becomes a measured record (same scenario →
+    keep-best dedup, exercising add()'s index path), plus one synthetic
+    transferred record per dataset scenario."""
+    from repro.tunebench import SpaceDataset
+    paths = sorted(DATASET_DIR.glob("*.space.json"))
+    assert paths, f"no shipped datasets under {DATASET_DIR}"
+    wisdom = Wisdom("fixture")
+    for p in paths:
+        ds = SpaceDataset.load(p)
+        family = get_device(ds.device_kind).family
+        for ev in ds.feasible():
+            wisdom.add(WisdomRecord(
+                device_kind=ds.device_kind, device_family=family,
+                problem_size=ds.problem_size, dtype=ds.dtype,
+                config=dict(ev.config), score_us=float(ev.score_us),
+                provenance={"strategy": "recorded", "evaluations": 1}))
+        wisdom.add(WisdomRecord(
+            device_kind="tpu-v4", device_family="tpu-v4",
+            problem_size=ds.problem_size, dtype=ds.dtype,
+            config={"transferred": True},
+            score_us=1.0,
+            provenance=make_transfer_provenance(
+                ds.device_kind, len(ds), confidence=0.8,
+                predicted_us=1.0)), keep_best=False)
+    return wisdom
+
+
+def equivalence_queries(wisdom: Wisdom):
+    """Query grid hitting every §4.5 tier against ``wisdom``."""
+    queries = []
+    for r in wisdom.records:
+        p = r.problem_size
+        queries += [
+            (r.device_kind, p, r.dtype, None),                 # exact
+            (r.device_kind, p, "bfloat16", None),              # dtype miss
+            (r.device_kind, tuple(2 * x for x in p), r.dtype, None),
+            ("tpu-v4", p, r.dtype, None),                      # transfer/dev
+            ("tpu-v4", p, r.dtype, 0.9),                       # gated out
+            ("tpu-v5-lite", p, r.dtype, None),                 # family tier
+            ("gpu-h100", p, "float64", None),                  # any tier
+        ]
+    return queries
+
+
+def check_equivalence(wisdom: Wisdom) -> tuple[int, int]:
+    """(queries, mismatches) of indexed vs linear-scan selection."""
+    queries = equivalence_queries(wisdom)
+    bad = 0
+    for q in queries:
+        got = wisdom.select_record(*q)
+        want = wisdom.select_record_linear(*q)
+        got_id = got[0].record_id() if got[0] is not None else None
+        want_id = want[0].record_id() if want[0] is not None else None
+        if (got_id, got[1]) != (want_id, want[1]):
+            bad += 1
+    return len(queries), bad
+
+
+def run():
+    yield csv_row("select_scaling", "records", "p50_us",
+                  "ratio_vs_smallest", "pass")
+    rows = scaling_rows()
+    base = rows[0][1]
+    worst = 0.0
+    for size, p50 in rows:
+        ratio = p50 / base if base else 0.0
+        worst = max(worst, ratio)
+        yield csv_row("select_scaling", size, f"{p50:.3f}",
+                      f"{ratio:.3f}", int(ratio <= MAX_P50_RATIO))
+    yield csv_row("select_equivalence", "queries", "mismatches", "pass")
+    n_q, bad = check_equivalence(fixture_wisdom())
+    yield csv_row("select_equivalence", n_q, bad, int(bad == 0))
+    run.passed = worst <= MAX_P50_RATIO and bad == 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    check = "--check" in argv
+    for row in run():
+        print(row)
+    if check and not run.passed:
+        print("select_scaling: FAILED (p50 not flat or indexed select "
+              "diverged from linear scan)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

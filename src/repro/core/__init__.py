@@ -20,9 +20,9 @@ from .device import (DEVICES, DeviceSpec, current_device, current_device_kind,
                      get_device, TPU_V4, TPU_V5E, DEVICE_ENV)
 from .param import Config, ConfigSpace, TunableParam
 from .registry import all_kernels, get_kernel, load_builtin_kernels, register
-from .wisdom import (Wisdom, WisdomRecord, WisdomVersionError, WISDOM_VERSION,
-                     make_provenance, default_wisdom_dir, merge_lineage,
-                     migrate_doc, doc_version)
+from .wisdom import (Wisdom, WisdomIndex, WisdomRecord, WisdomVersionError,
+                     WISDOM_VERSION, make_provenance, default_wisdom_dir,
+                     merge_lineage, migrate_doc, doc_version)
 from .wisdom_kernel import WisdomKernel, resolve_backend, BACKEND_ENV
 from .workload import Workload
 
@@ -35,7 +35,8 @@ __all__ = [
     "get_device", "TPU_V4", "TPU_V5E", "DEVICE_ENV",
     "Config", "ConfigSpace", "TunableParam",
     "all_kernels", "get_kernel", "load_builtin_kernels", "register",
-    "Wisdom", "WisdomRecord", "WisdomVersionError", "WISDOM_VERSION",
+    "Wisdom", "WisdomIndex", "WisdomRecord", "WisdomVersionError",
+    "WISDOM_VERSION",
     "make_provenance", "default_wisdom_dir", "merge_lineage", "migrate_doc",
     "doc_version",
     "WisdomKernel", "resolve_backend", "BACKEND_ENV",

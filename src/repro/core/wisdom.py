@@ -302,6 +302,103 @@ def _distance(a: Sequence[int], b: Sequence[int]) -> float:
         math.log2(max(x, 1) / max(y, 1)) ** 2 for x, y in zip(a, b)))
 
 
+def _metrics():
+    """The process metrics registry, or None (obs disabled / not loaded).
+
+    Imported lazily: ``repro.obs`` imports ``repro.core.scenario`` for its
+    tier vocabulary, so a module-level import here could deadlock package
+    initialization depending on which package is imported first."""
+    try:
+        from repro.obs import runtime as obs_runtime
+    except ImportError:  # pragma: no cover - obs is part of this repo
+        return None
+    return obs_runtime.metrics()
+
+
+class WisdomIndex:
+    """Hash index over one kernel's records — the §4.5 select hot path.
+
+    ``Wisdom.select_record`` historically re-filtered every record per
+    call, so select latency grew linearly with the store exactly as the
+    fleet succeeded at filling it. The index buckets records once:
+
+    * ``exact``: (device_kind, problem_size, dtype) → measured records,
+      giving O(1) dict hops for the common serve-time exact hit;
+    * one bucket family per fallback tier (device+dtype, device,
+      family+dtype, family, dtype, all-measured), so a fallback select
+      scans only its tier's candidates, not the whole store;
+    * ``transferred``: (device_kind, dtype) → predicted records (the
+      confidence gate stays per-query, it depends on the threshold);
+    * ``scenario_slot``: scenario → first list position, which turns
+      ``Wisdom.add``'s keep-best duplicate scan into one lookup.
+
+    Buckets map ``id(record) → record`` so membership updates during
+    ``add()`` are O(1) and iteration order stays insertion order (the
+    tie-break never depends on it — selection orders by distance, score,
+    record_id). The index is derived state: :meth:`Wisdom.index` rebuilds
+    it whenever ``Wisdom.records`` was rebound or resized behind its
+    back, so direct list mutation stays legal, just unindexed-until-read.
+    """
+
+    __slots__ = ("source", "size", "scenario_slot", "exact",
+                 "by_device_dtype", "by_device", "by_family_dtype",
+                 "by_family", "by_dtype", "measured", "transferred")
+
+    def __init__(self, records: Sequence["WisdomRecord"] = ()):
+        self.source = records          # identity-checked by Wisdom.index()
+        self.size = 0
+        self.scenario_slot: dict[tuple, int] = {}
+        self.exact: dict[tuple, dict] = {}
+        self.by_device_dtype: dict[tuple, dict] = {}
+        self.by_device: dict[str, dict] = {}
+        self.by_family_dtype: dict[tuple, dict] = {}
+        self.by_family: dict[str, dict] = {}
+        self.by_dtype: dict[str, dict] = {}
+        self.measured: dict[int, "WisdomRecord"] = {}
+        self.transferred: dict[tuple, dict] = {}
+        for position, rec in enumerate(records):
+            self.insert(rec, position)
+
+    def insert(self, rec: "WisdomRecord", position: int) -> None:
+        """Index ``rec`` living at ``records[position]``."""
+        self.scenario_slot.setdefault(rec.scenario(), position)
+        key = id(rec)
+        if rec.is_transferred():
+            self.transferred.setdefault(
+                (rec.device_kind, rec.dtype), {})[key] = rec
+        else:
+            self.exact.setdefault(rec.scenario(), {})[key] = rec
+            self.by_device_dtype.setdefault(
+                (rec.device_kind, rec.dtype), {})[key] = rec
+            self.by_device.setdefault(rec.device_kind, {})[key] = rec
+            self.by_family_dtype.setdefault(
+                (rec.device_family, rec.dtype), {})[key] = rec
+            self.by_family.setdefault(rec.device_family, {})[key] = rec
+            self.by_dtype.setdefault(rec.dtype, {})[key] = rec
+            self.measured[key] = rec
+        self.size += 1
+
+    def replace(self, old: "WisdomRecord", new: "WisdomRecord",
+                position: int) -> None:
+        """Swap ``old`` for ``new`` at the same list position (keep-best
+        resolution in :meth:`Wisdom.add`). ``scenario_slot`` is untouched:
+        both records share the scenario and the position."""
+        key = id(old)
+        if old.is_transferred():
+            self.transferred[(old.device_kind, old.dtype)].pop(key, None)
+        else:
+            self.exact[old.scenario()].pop(key, None)
+            self.by_device_dtype[(old.device_kind, old.dtype)].pop(key, None)
+            self.by_device[old.device_kind].pop(key, None)
+            self.by_family_dtype[(old.device_family, old.dtype)].pop(
+                key, None)
+            self.by_family[old.device_family].pop(key, None)
+            self.by_dtype[old.dtype].pop(key, None)
+            self.measured.pop(key, None)
+        self.size -= 1
+        self.insert(new, position)
+
+
 def doc_version(doc: dict) -> int:
     """Schema version a wisdom document declares (pre-versioning files
     count as v1)."""
@@ -342,6 +439,22 @@ class Wisdom:
                  records: list[WisdomRecord] | None = None):
         self.kernel_name = kernel_name
         self.records: list[WisdomRecord] = list(records or [])
+        self._index: WisdomIndex | None = None
+
+    def index(self) -> WisdomIndex:
+        """The :class:`WisdomIndex` over :attr:`records`, (re)built lazily.
+
+        Staleness check: the index remembers which list object it was
+        built from and how many records it indexed; rebinding ``records``
+        or changing its length invalidates it. In-place *replacement*
+        behind our back (``w.records[i] = other``) is not detected —
+        every in-repo mutation goes through :meth:`add`, which maintains
+        the index incrementally."""
+        idx = self._index
+        if (idx is None or idx.source is not self.records
+                or idx.size != len(self.records)):
+            idx = self._index = WisdomIndex(self.records)
+        return idx
 
     # -- persistence ---------------------------------------------------------
 
@@ -390,36 +503,54 @@ class Wisdom:
     def add(self, record: WisdomRecord, keep_best: bool = True) -> None:
         """Add a tuning result. If a record for the same scenario exists and
         ``keep_best``, keep whichever scored better (re-tuning semantics);
-        the survivor absorbs both records' provenance into its lineage."""
+        the survivor absorbs both records' provenance into its lineage.
+
+        The same-scenario lookup goes through the index's
+        ``scenario_slot`` map (one dict hop), not a list scan, so bulk
+        re-adds (fleet merge echoes, prune rebuilds) are O(1) per record
+        instead of O(n)."""
         if keep_best:
-            for i, r in enumerate(self.records):
-                if r.scenario() == record.scenario():
-                    if r.record_id() == record.record_id():
-                        # Same result re-added (e.g. a sync echo): pool
-                        # lineages only, keep re-adds a no-op otherwise.
-                        if record.lineage != r.lineage:
-                            r.lineage = merge_lineage(
-                                extra=[*r.lineage, *record.lineage])
-                        return
-                    # Measured beats transferred regardless of score (a
-                    # prediction must never displace a real measurement
-                    # — that is what verification jobs are for, see
-                    # repro.transfer); equal scores fall through to
-                    # record_id so the survivor is insertion-order
-                    # independent, like select() and better_record.
-                    winner, loser = ((record, r)
-                                     if ((record.is_transferred(),
-                                          record.score_us,
-                                          -record.evaluations(),
-                                          record.record_id())
-                                         < (r.is_transferred(), r.score_us,
-                                            -r.evaluations(),
-                                            r.record_id()))
-                                     else (r, record))
-                    winner.lineage = merge_lineage(winner, loser)
-                    self.records[i] = winner
+            idx = self.index()
+            i = idx.scenario_slot.get(record.scenario())
+            if i is not None:
+                r = self.records[i]
+                if r.record_id() == record.record_id():
+                    # Same result re-added (e.g. a sync echo): pool
+                    # lineages only, keep re-adds a no-op otherwise.
+                    if record.lineage != r.lineage:
+                        r.lineage = merge_lineage(
+                            extra=[*r.lineage, *record.lineage])
                     return
+                # Measured beats transferred regardless of score (a
+                # prediction must never displace a real measurement
+                # — that is what verification jobs are for, see
+                # repro.transfer); equal scores fall through to
+                # record_id so the survivor is insertion-order
+                # independent, like select() and better_record.
+                winner, loser = ((record, r)
+                                 if ((record.is_transferred(),
+                                      record.score_us,
+                                      -record.evaluations(),
+                                      record.record_id())
+                                     < (r.is_transferred(), r.score_us,
+                                        -r.evaluations(),
+                                        r.record_id()))
+                                 else (r, record))
+                winner.lineage = merge_lineage(winner, loser)
+                self.records[i] = winner
+                if winner is not r:
+                    idx.replace(r, winner, i)
+                return
+            self.records.append(record)
+            idx.insert(record, len(self.records) - 1)
+            return
         self.records.append(record)
+        # keep_best=False appends allow duplicate scenarios; extend the
+        # index only if it is live and current, else let it rebuild.
+        idx = self._index
+        if (idx is not None and idx.source is self.records
+                and idx.size == len(self.records) - 1):
+            idx.insert(record, len(self.records) - 1)
 
     # -- selection (paper §4.5) ----------------------------------------------
 
@@ -463,7 +594,72 @@ class Wisdom:
         default configuration. This is the full-information form: the
         telemetry layer reads the record's transfer confidence and score
         off it, and ``select`` above reduces it to a config dict.
+
+        Routed through :class:`WisdomIndex`: the exact tier is two dict
+        hops, each fallback tier touches only its own candidates — select
+        cost no longer grows with the store. Property-tested byte-equal
+        to the historical scan (:meth:`select_record_linear`) in
+        ``tests/test_wisdom_index_props.py``.
         """
+        problem = tuple(int(x) for x in problem_size)
+        family = get_device(device_kind).family
+        threshold = (TRANSFER_MIN_CONFIDENCE
+                     if min_transfer_confidence is None
+                     else float(min_transfer_confidence))
+        idx = self.index()
+
+        def best(cands) -> WisdomRecord | None:
+            if not cands:
+                return None
+            # record_id as the last key: equal-distance equal-score
+            # candidates must resolve the same way on every host, not by
+            # whatever order records happened to be inserted or merged.
+            return min(cands, key=lambda r: (_distance(r.problem_size,
+                                                       problem),
+                                             r.score_us, r.record_id()))
+
+        empty: dict = {}
+        transferred = [
+            r for r in idx.transferred.get((device_kind, dtype),
+                                           empty).values()
+            if r.transfer_confidence() >= threshold]
+        tiers = (
+            (T_EXACT,
+             idx.exact.get((device_kind, problem, dtype), empty).values()),
+            (T_TRANSFER, transferred),
+            (T_DEVICE_DTYPE,
+             idx.by_device_dtype.get((device_kind, dtype), empty).values()),
+            (T_DEVICE, idx.by_device.get(device_kind, empty).values()),
+            (T_FAMILY_DTYPE,
+             idx.by_family_dtype.get((family, dtype), empty).values()),
+            (T_FAMILY, idx.by_family.get(family, empty).values()),
+            (T_ANY_DTYPE, idx.by_dtype.get(dtype, empty).values()),
+            (T_ANY, idx.measured.values()),
+        )
+
+        result: tuple[WisdomRecord | None, str] = (None, T_DEFAULT)
+        for tier_name, cands in tiers:
+            rec = best(cands)
+            if rec is not None:
+                result = (rec, tier_name)
+                break
+        m = _metrics()
+        if m is not None:
+            outcome = ("hit" if result[1] == T_EXACT
+                       else "default" if result[0] is None else "fallback")
+            m.counter("select.index_hit", kernel=self.kernel_name,
+                      outcome=outcome).inc()
+        return result
+
+    def select_record_linear(self, device_kind: str,
+                             problem_size: Sequence[int], dtype: str,
+                             min_transfer_confidence: float | None = None
+                             ) -> tuple["WisdomRecord | None", str]:
+        """The historical O(n) linear-scan §4.5 selection, kept verbatim
+        as the *reference oracle*: ``tests/test_wisdom_index_props.py``
+        asserts the indexed :meth:`select_record` returns a byte-identical
+        (record_id, tier) for arbitrary record sets. Not for production
+        use — it re-filters every record per call."""
         problem = tuple(int(x) for x in problem_size)
         family = get_device(device_kind).family
         threshold = (TRANSFER_MIN_CONFIDENCE
@@ -479,9 +675,6 @@ class Wisdom:
         def best(cands: list[WisdomRecord]) -> WisdomRecord | None:
             if not cands:
                 return None
-            # record_id as the last key: equal-distance equal-score
-            # candidates must resolve the same way on every host, not by
-            # whatever order records happened to be inserted or merged.
             return min(cands, key=lambda r: (_distance(r.problem_size,
                                                        problem),
                                              r.score_us, r.record_id()))

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import datetime
 import json
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -20,6 +21,13 @@ from repro.core.wisdom import (WISDOM_VERSION, Wisdom, WisdomRecord,
                                doc_version, migrate_doc)
 
 WISDOM_SUFFIX = ".wisdom.json"
+
+#: Default bound on the per-store LRU of loaded :class:`Wisdom` objects.
+#: Serving touches a handful of kernels per process but PullSync re-loads
+#: each one every pull interval; caching the parsed object (validated
+#: against the file's stat signature) makes the steady state O(1) stat
+#: calls instead of O(records) JSON parses per kernel per tick.
+DEFAULT_CACHE_KERNELS = 16
 
 #: Transport-name namespace reserved for non-wisdom control documents.
 #: The fleet orchestrator (``repro.fleet``) publishes demand tables, job
@@ -53,8 +61,14 @@ class PruneReport:
 class WisdomStore:
     """A wisdom directory with schema versioning and fleet-merge support."""
 
-    def __init__(self, root: Path | str | None = None):
+    def __init__(self, root: Path | str | None = None,
+                 cache_kernels: int = DEFAULT_CACHE_KERNELS):
         self.root = Path(root) if root is not None else default_wisdom_dir()
+        # Bounded LRU of parsed wisdom: kernel -> (stat signature, Wisdom).
+        # 0 disables caching entirely (every load re-parses).
+        self.cache_kernels = int(cache_kernels)
+        self._cache: OrderedDict[str, tuple[tuple | None, Wisdom]] = \
+            OrderedDict()
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"WisdomStore({str(self.root)!r})"
@@ -82,10 +96,61 @@ class WisdomStore:
 
     # -- load/save -----------------------------------------------------------
 
+    def _stat_key(self, kernel_name: str) -> tuple | None:
+        """File identity signature the cache is validated against (None
+        when the file is absent). Any writer — this process or another —
+        that lands a new file changes (mtime_ns, size, inode) and the
+        next load re-parses; ``DirectoryTransport.publish`` and external
+        tools therefore cannot serve a stale cache entry."""
+        try:
+            st = self.path_for(kernel_name).stat()
+        except OSError:
+            return None
+        return (st.st_mtime_ns, st.st_size, st.st_ino)
+
+    def _remember(self, kernel_name: str, key: tuple | None,
+                  wisdom: Wisdom) -> None:
+        self._cache[kernel_name] = (key, wisdom)
+        self._cache.move_to_end(kernel_name)
+        while len(self._cache) > self.cache_kernels:
+            self._cache.popitem(last=False)
+
     def load(self, kernel_name: str) -> Wisdom:
         """Load one kernel's wisdom (empty if absent), migrating old schema
-        versions in memory and refusing future ones loudly."""
-        return Wisdom.load(kernel_name, self.root)
+        versions in memory and refusing future ones loudly.
+
+        Cached: repeat loads of an unchanged file return the *same*
+        parsed :class:`Wisdom` (and its select index) from a bounded LRU,
+        validated against the file's stat signature. Callers share the
+        object — the in-repo contract is load → mutate → :meth:`save`
+        (which refreshes the cache) or read-only use, so sharing is safe;
+        a caller wanting an isolated copy goes through
+        :meth:`invalidate_cache` or ``Wisdom.load`` directly."""
+        if self.cache_kernels <= 0:
+            return Wisdom.load(kernel_name, self.root)
+        key = self._stat_key(kernel_name)
+        hit = self._cache.get(kernel_name)
+        from repro.obs import runtime as obs_runtime
+        m = obs_runtime.metrics()
+        if hit is not None and hit[0] == key:
+            self._cache.move_to_end(kernel_name)
+            if m is not None:
+                m.counter("store.cache", outcome="hit").inc()
+            return hit[1]
+        wisdom = Wisdom.load(kernel_name, self.root)
+        self._remember(kernel_name, key, wisdom)
+        if m is not None:
+            m.counter("store.cache", outcome="miss").inc()
+        return wisdom
+
+    def invalidate_cache(self, kernel_name: str | None = None) -> None:
+        """Drop cached parsed wisdom (one kernel, or everything). Only
+        needed when a caller wants a private copy or has mutated a loaded
+        object without saving it."""
+        if kernel_name is None:
+            self._cache.clear()
+        else:
+            self._cache.pop(kernel_name, None)
 
     def load_doc(self, kernel_name: str) -> dict | None:
         """Raw JSON document for one kernel, or None if absent. No version
@@ -97,7 +162,14 @@ class WisdomStore:
             return json.load(f)
 
     def save(self, wisdom: Wisdom) -> Path:
-        return wisdom.save(self.root)
+        path = wisdom.save(self.root)
+        if self.cache_kernels > 0:
+            # The object we just wrote IS the freshest parse of the file:
+            # re-key the cache to the new stat signature instead of
+            # forcing the next load to re-parse what we already hold.
+            self._remember(wisdom.kernel_name,
+                           self._stat_key(wisdom.kernel_name), wisdom)
+        return path
 
     def version_of(self, kernel_name: str) -> int | None:
         doc = self.load_doc(kernel_name)

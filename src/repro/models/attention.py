@@ -118,10 +118,15 @@ def init_kv_cache(cfg: ArchConfig, n_layers: int, batch: int, max_seq: int,
 
 def attn_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache_k: jax.Array,
                 cache_v: jax.Array, pos: jax.Array,
-                window: jax.Array | int | None = None
+                window: jax.Array | int | None = None,
+                start: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One-token decode. x: (B, 1, D); cache_k/v: (B, Hkv, S, D);
-    pos: scalar — index where the new token is written.
+    pos: scalar — index where the new token is written. ``start``,
+    when given, is a (B,) vector of per-slot window origins for
+    token-level continuous batching: slot b attends only to cache
+    positions in [start[b], pos], hiding the previous occupant's stale
+    K/V (always below start[b], since the arena cursor only advances).
     Returns (out, new_cache_k, new_cache_v)."""
     B = x.shape[0]
     positions = jnp.full((1,), pos)
@@ -132,16 +137,23 @@ def attn_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache_k: jax.Array,
                                               pos, axis=2)
     S = cache_k.shape[2]
     win = window if window is not None else 0
-    o = _decode_attention(q, cache_k, cache_v, pos, win, cfg.attn_softcap)
+    o = _decode_attention(q, cache_k, cache_v, pos, win, cfg.attn_softcap,
+                          start=start)
     o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.d_q)
     out = jnp.einsum("bse,ed->bsd", o, p["wo"].astype(x.dtype))
     return out, cache_k, cache_v
 
 
 def _decode_attention(q, cache_k, cache_v, pos, window,
-                      softcap: float | None) -> jax.Array:
+                      softcap: float | None,
+                      start: jax.Array | None = None) -> jax.Array:
     """q: (B, Hq, 1, D) vs full cache; masks unwritten and out-of-window
-    positions. ``window`` may be traced (0 = unlimited).
+    positions, plus per-batch positions below ``start`` (stale cache
+    from a slot's previous occupant). ``window`` may be traced (0 =
+    unlimited). Masking (not zeroing) is load-bearing for slot reuse: a
+    zeroed K row still gets softmax weight exp(0), so stale rows must be
+    excluded from the normalization, and rotary phases stay correct
+    because only relative distances inside [start, pos] survive.
 
     The cache stays in its storage dtype — an ``astype(f32)`` here gets
     hoisted by the compiler into a full f32 copy of the *whole stacked
@@ -158,7 +170,12 @@ def _decode_attention(q, cache_k, cache_v, pos, window,
     k_pos = jnp.arange(cache_k.shape[2])
     valid = k_pos <= pos
     valid &= jnp.where(window > 0, (pos - k_pos) < window, True)
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    if start is None:
+        mask = valid[None, None, None, :]
+    else:
+        mask = (valid[None, :]
+                & (k_pos[None, :] >= start[:, None]))[:, None, None, :]
+    s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(cache_v.dtype), cache_v,
                    preferred_element_type=jnp.float32)

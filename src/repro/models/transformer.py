@@ -312,8 +312,11 @@ class DecoderLM:
         return cache
 
     def _block_decode(self, blk: dict, x, window, pos, kv=None, mla=None,
-                      mamba=None):
-        """One-layer decode. Returns (x, new_kv, new_mla, new_mamba)."""
+                      mamba=None, start=None):
+        """One-layer decode. Returns (x, new_kv, new_mla, new_mamba).
+        ``start`` (per-slot attention-window origins, token-level
+        serving) only reaches the plain-attention path — the
+        :attr:`decode_supports_start` gate keeps it None elsewhere."""
         cfg = self.cfg
         h = apply_norm(cfg, blk["ln1"], x)
         new_kv = new_mla = new_mamba = None
@@ -323,7 +326,7 @@ class DecoderLM:
             new_mla = (ckv, kpe)
         else:
             mix, ck, cv = A.attn_decode(cfg, blk["attn"], h, kv[0], kv[1],
-                                        pos, window=window)
+                                        pos, window=window, start=start)
             new_kv = (ck, cv)
         if cfg.mixer == "mamba+attn":
             mo, ssm, win = M.mamba_decode(cfg, blk["mamba"], h, mamba[0],
@@ -342,9 +345,26 @@ class DecoderLM:
             y = apply_norm(cfg, blk["post_ln2"], y)
         return x + y, new_kv, new_mla, new_mamba
 
+    @property
+    def decode_supports_start(self) -> bool:
+        """Whether :meth:`decode_step` honors a per-slot ``cache["start"]``
+        vector (token-level continuous batching, ``repro.serve``). True
+        only for plain rotary/positionless attention stacks: recurrent
+        mixers (rwkv, mamba+attn) carry state that a mask cannot scope to
+        one slot's window, cross-attention and MLA caches are not
+        start-masked, and learned positional embeddings index absolute
+        arena positions. ``ServeEngine(mode="auto")`` reads this to pick
+        token-level vs cohort scheduling."""
+        cfg = self.cfg
+        return (cfg.mixer == "attn" and cfg.mla is None
+                and not cfg.cross_attn_period and cfg.pos != "learned")
+
     def decode_step(self, p: Params, cache: Cache, tokens: jax.Array
                     ) -> tuple[jax.Array, Cache]:
-        """tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+        """tokens: (B, 1) -> (logits (B, 1, V), new cache). An optional
+        ``cache["start"]`` (B,) vector scopes each batch row's attention
+        to cache positions [start[b], pos] — see
+        :attr:`decode_supports_start`."""
         cfg = self.cfg
         pos = cache["pos"]
         x = self._embed_at(p, tokens, pos)
@@ -355,7 +375,8 @@ class DecoderLM:
         elif cfg.cross_attn_period:
             x, cache = self._vision_decode(p, x, cache, pos)
         else:
-            x, cache = self._stack_decode(p, x, cache, pos)
+            x, cache = self._stack_decode(p, x, cache, pos,
+                                          start=cache.get("start"))
         x = apply_norm(cfg, p["final_norm"], x)
         logits = self._head(p, x)
         cache["pos"] = pos + 1
@@ -387,7 +408,7 @@ class DecoderLM:
             body, x, (p["layers"], rc["wkv"], rc["prev_t"], rc["prev_c"]))
         return x, {"wkv": wkv, "prev_t": pt, "prev_c": pc}
 
-    def _stack_decode(self, p, x, cache, pos):
+    def _stack_decode(self, p, x, cache, pos, start=None):
         cfg = self.cfg
         windows = self._windows()
         n_dense = len(cfg.dense_layers) if cfg.moe is not None else 0
@@ -407,7 +428,7 @@ class DecoderLM:
                 kd = cache["kv_dense"]
                 x, nk, _, _ = self._block_decode(
                     blk, x, int(cfg.layer_windows[i]), pos,
-                    kv=(kd["k"][i], kd["v"][i]))
+                    kv=(kd["k"][i], kd["v"][i]), start=start)
                 cache["kv_dense"] = {"k": kd["k"].at[i].set(nk[0]),
                                      "v": kd["v"].at[i].set(nk[1])}
 
@@ -416,7 +437,8 @@ class DecoderLM:
         def body(xc, inp):
             blk, win, kv_l, mla_l, mamba_l = inp
             xc, nkv, nmla, nmb = self._block_decode(
-                blk, xc, win, pos, kv=kv_l, mla=mla_l, mamba=mamba_l)
+                blk, xc, win, pos, kv=kv_l, mla=mla_l, mamba=mamba_l,
+                start=start)
             return xc, (nkv, nmla, nmb)
 
         if use_mla:

@@ -3,7 +3,7 @@
 The test suite uses a small slice of hypothesis (``@given`` with keyword or
 positional strategies, ``@settings(max_examples=..., deadline=...)``, and the
 ``integers`` / ``floats`` / ``booleans`` / ``sampled_from`` / ``lists`` /
-``tuples`` / ``data`` strategies).  When the real package is installed it is
+``tuples`` / ``one_of`` / ``data`` strategies plus ``.map``/``.filter``).  When the real package is installed it is
 used untouched; on a clean environment ``conftest.py`` installs this module
 as ``sys.modules["hypothesis"]`` so collection and execution still work.
 
@@ -37,6 +37,20 @@ class SearchStrategy:
     def example(self, rng: np.random.Generator):
         return self._draw(rng)
 
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)),
+                              f"{self._label}.map")
+
+    def filter(self, predicate):
+        def draw(rng):
+            for _ in range(1000):
+                x = self._draw(rng)
+                if predicate(x):
+                    return x
+            raise _Unsatisfied(f"filter on {self._label} found no example")
+
+        return SearchStrategy(draw, f"{self._label}.filter")
+
     def __repr__(self):  # pragma: no cover
         return f"SearchStrategy({self._label})"
 
@@ -67,6 +81,13 @@ def sampled_from(elements):
 def tuples(*strategies):
     return SearchStrategy(
         lambda rng: tuple(s.example(rng) for s in strategies), "tuples")
+
+
+def one_of(*strategies):
+    opts = list(strategies)
+    return SearchStrategy(
+        lambda rng: opts[int(rng.integers(len(opts)))].example(rng),
+        "one_of")
 
 
 def lists(elements, min_size=0, max_size=10, unique=False):
@@ -162,6 +183,7 @@ strategies = types.ModuleType("hypothesis.strategies")
 for _name, _obj in (("integers", integers), ("floats", floats),
                     ("booleans", booleans), ("sampled_from", sampled_from),
                     ("tuples", tuples), ("lists", lists), ("data", data),
+                    ("one_of", one_of),
                     ("SearchStrategy", SearchStrategy),
                     ("DataObject", DataObject)):
     setattr(strategies, _name, _obj)

@@ -12,6 +12,7 @@ import pytest
 import repro.fleet
 import repro.prof
 import repro.sandbox
+import repro.serve
 import repro.transfer
 import repro.tunebench
 import repro.tuner
@@ -23,6 +24,7 @@ MODULES = {
     "repro.transfer": (repro.transfer, False),     # docstring only
     "repro.sandbox": (repro.sandbox, True),
     "repro.prof": (repro.prof, True),
+    "repro.serve": (repro.serve, False),   # docstring only
 }
 
 

@@ -53,6 +53,154 @@ def test_every_accepted_request_eventually_finishes(data):
     assert sorted(b.finished) == sorted(accepted)
 
 
+def test_scenario_bucketed_fifo_admission():
+    """Admission drains one scenario bucket before switching, and within
+    a bucket it is strictly FIFO (ISSUE 9: co-scheduled slots share a
+    tuned scenario so launches stay wisdom-exact)."""
+    b = ContinuousBatcher(n_slots=2, max_seq=64)
+    # interleaved submission across two scenarios
+    b.submit(0, 4, 4, scenario="A")
+    b.submit(1, 4, 4, scenario="B")
+    b.submit(2, 4, 4, scenario="A")
+    b.submit(3, 4, 4, scenario="B")
+    first = [rid for _, rid, _ in b.admit()]
+    assert first == [0, 2]              # bucket A drains first, in order
+    for _ in range(8):
+        b.step()
+    second = [rid for _, rid, _ in b.admit()]
+    assert second == [1, 3]             # then bucket B, in order
+    assert b.scenario_switches == 1
+
+
+def test_head_of_line_capacity_blocking():
+    """A head request that does not fit the remaining arena blocks its
+    bucket — later, smaller requests must not skip past it (skipping
+    would starve long requests)."""
+    b = ContinuousBatcher(n_slots=2, max_seq=32)
+    b.submit(0, 16, 12, scenario="A")   # needs 28 columns
+    b.submit(1, 2, 2, scenario="A")     # would fit anywhere
+    assert b.admit(arena_pos=8) == []   # 8 + 28 > 32: head blocks bucket
+    admitted = [rid for _, rid, _ in b.admit(arena_pos=0)]
+    assert admitted == [0, 1]           # fresh arena: FIFO order intact
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_randomized_interleaving_conserves_requests(data):
+    """Stress property: under any seeded interleaving of submit / admit /
+    advance, every accepted request lives in exactly one of
+    {queue, slot, finished}, no request is lost or duplicated, rejected
+    requests never reach a slot, and per-scenario admission order equals
+    submission order."""
+    n_slots = data.draw(st.integers(1, 4))
+    max_seq = data.draw(st.sampled_from([16, 32]))
+    b = ContinuousBatcher(n_slots=n_slots, max_seq=max_seq)
+    accepted, rejected, admitted_order = set(), set(), []
+    submitted_order = {}                # scenario -> [rid, ...]
+    next_rid = 0
+
+    def check_invariants():
+        queued = {q.request_id for q in b.queue}
+        in_slots = {s.request_id for s in b.slots if s.active}
+        finished = set(b.finished)
+        assert len(b.finished) == len(finished)          # no duplicates
+        assert queued | in_slots | finished == accepted  # none lost
+        assert not (queued & in_slots) and not (queued & finished)
+        assert not (in_slots & finished)                 # exactly one place
+        assert not (rejected & (queued | in_slots | finished))
+        assert sum(s.active for s in b.slots) + sum(
+            not s.active for s in b.slots) == n_slots    # slots conserved
+
+    for _ in range(data.draw(st.integers(5, 40))):
+        op = data.draw(st.sampled_from(["submit", "admit", "advance"]))
+        if op == "submit":
+            plen = data.draw(st.integers(1, 20))
+            mnew = data.draw(st.integers(1, 20))
+            scen = data.draw(st.sampled_from(["A", "B", "C"]))
+            if b.submit(next_rid, plen, mnew, scenario=scen):
+                accepted.add(next_rid)
+                submitted_order.setdefault(scen, []).append(next_rid)
+            else:
+                rejected.add(next_rid)
+            next_rid += 1
+        elif op == "admit":
+            pos = data.draw(st.integers(0, max_seq - 1))
+            for _slot, rid, _plen in b.admit(arena_pos=pos):
+                admitted_order.append((b.slots[_slot].scenario, rid))
+        else:
+            active = [i for i, s in enumerate(b.slots) if s.active]
+            if active:
+                b.advance(data.draw(st.sampled_from(active)))
+        check_invariants()
+
+    # FIFO within each scenario bucket: the admitted rids of a scenario
+    # are a prefix of that scenario's submission order.
+    for scen, order in submitted_order.items():
+        got = [rid for s, rid in admitted_order if s == scen]
+        assert got == order[:len(got)]
+
+
+class _StartAwareToyModel:
+    """Decode-only toy with the token-mode contract: advertises
+    ``decode_supports_start`` and tolerates ``cache["start"]``.
+    Next token = (tok + 1) mod vocab, so outputs are deterministic."""
+
+    vocab = 13
+    decode_supports_start = True
+
+    def init_cache(self, n_slots, max_seq):
+        import jax.numpy as jnp
+        return {"pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(self, params, cache, tok):
+        import jax
+        import jax.numpy as jnp
+        logits = jax.nn.one_hot((tok[:, 0] + 1) % self.vocab,
+                                self.vocab)[:, None]
+        return logits, {**cache, "pos": cache["pos"] + 1}
+
+
+def test_mid_stream_admission_token_mode():
+    """Token mode refills freed slots while other slots keep decoding:
+    mixed-length traffic must report in-flight admissions, and every
+    request still gets exactly ``max_new_tokens`` outputs."""
+    from repro.serve import Request, ServeEngine
+    eng = ServeEngine(_StartAwareToyModel(), params={}, n_slots=2,
+                      max_seq=64)
+    assert eng.mode == "token"          # auto picks token for this model
+    lengths = {0: 2, 1: 9, 2: 3, 3: 5}  # short ones free mid-stream
+    for rid, mnew in lengths.items():
+        assert eng.submit(Request(rid, np.array([1, 2], np.int32),
+                                  max_new_tokens=mnew,
+                                  scenario="tpu-v5e|2x8|int32"))
+    out = eng.run()
+    assert out.mode == "token"
+    assert eng.batcher.done()
+    assert {rid: len(out[rid]) for rid in lengths} == lengths
+    # greedy toy model: tokens continue the +1 sequence from prompt end
+    assert out[0][:2] == [3, 4]
+    # rids 2/3 were queued behind a still-running slot -> admitted
+    # mid-stream, not at an arena boundary
+    assert out.inflight_admissions >= 1
+    assert 0.0 < out.occupancy <= 1.0
+    assert out.cohorts == 1             # everything fits one arena
+
+
+def test_cohort_mode_forced_on_token_capable_model():
+    """mode="cohort" must override auto-detection — the fallback path
+    stays reachable for A/B measurement (benchmarks/serve_throughput)."""
+    from repro.serve import Request, ServeEngine
+    eng = ServeEngine(_StartAwareToyModel(), params={}, n_slots=2,
+                      max_seq=32, mode="cohort")
+    assert eng.mode == "cohort"
+    for rid in range(3):
+        eng.submit(Request(rid, np.array([1], np.int32), max_new_tokens=2))
+    out = eng.run()
+    assert out.mode == "cohort"
+    assert out.cohorts == 2 and out.inflight_admissions == 0
+    assert {rid: len(out[rid]) for rid in range(3)} == {0: 2, 1: 2, 2: 2}
+
+
 def test_tuner_cli_end_to_end(tmp_path, monkeypatch, capture_dir,
                               wisdom_dir, small_fields):
     """python -m repro.tuner.tune over a real capture directory."""

@@ -278,3 +278,57 @@ def test_mixed_families_last_resort_any():
     assert (tier, cfg["c"]) == ("any", "v4-bf16")
     cfg, tier = w.select("gpu-h100", (256, 256), "bfloat16", DEFAULT)
     assert (tier, cfg["c"]) == ("any+dtype", "v4-bf16")
+
+
+# -- add() through the index (ISSUE 9 regression) -----------------------------
+
+def test_same_record_readd_is_noop():
+    """Re-adding the identical record (a fleet sync echo) must not grow
+    the store, must not grow lineage, and must keep the index live."""
+    w = Wisdom("k")
+    r = rec(score=5.0, config={"block": 8})
+    w.add(r)
+    lineage_before = [dict(e) for e in w.records[0].lineage]
+    echo = WisdomRecord.from_json(r.to_json())     # same record_id
+    assert echo.record_id() == r.record_id()
+    w.add(echo)
+    assert len(w) == 1
+    assert w.records[0].lineage == lineage_before
+    got, tier = w.select_record("tpu-v5e", (256, 256, 256), "float32")
+    assert tier == "exact" and got.config == {"block": 8}
+
+
+def test_keep_best_merges_lineage_through_index():
+    """The keep-best winner absorbs the loser's provenance whether the
+    winner is the incumbent or the newcomer — and the index serves the
+    survivor either way."""
+    # newcomer wins
+    w = Wisdom("k")
+    w.add(rec(score=10.0, config={"block": 1}))
+    w.add(rec(score=5.0, config={"block": 2}))
+    assert len(w) == 1 and w.records[0].config == {"block": 2}
+    assert len(w.records[0].lineage) >= 2          # both provenances pooled
+    got, tier = w.select_record("tpu-v5e", (256, 256, 256), "float32")
+    assert got is w.records[0] and tier == "exact"
+    # incumbent wins
+    w2 = Wisdom("k")
+    w2.add(rec(score=5.0, config={"block": 2}))
+    w2.add(rec(score=10.0, config={"block": 1}))
+    assert len(w2) == 1 and w2.records[0].config == {"block": 2}
+    assert len(w2.records[0].lineage) >= 2
+    got2, _ = w2.select_record("tpu-v5e", (256, 256, 256), "float32")
+    assert got2.config == {"block": 2}
+
+
+def test_add_after_direct_mutation_rebuilds_index():
+    """Mutating ``records`` directly (merge/prune code paths do) must not
+    leave add() consulting a stale scenario map."""
+    w = Wisdom("k")
+    w.add(rec(score=9.0, config={"block": 1}))
+    w.records.append(rec(device="tpu-v4", family="tpu-v4",
+                         score=7.0, config={"block": 4}))
+    w.add(rec(device="tpu-v4", family="tpu-v4",
+              score=3.0, config={"block": 16}))    # better than appended
+    assert len(w) == 2
+    got, tier = w.select_record("tpu-v4", (256, 256, 256), "float32")
+    assert tier == "exact" and got.config == {"block": 16}

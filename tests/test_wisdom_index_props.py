@@ -1,0 +1,136 @@
+"""ISSUE 9 satellite: the indexed ``Wisdom.select_record`` is
+byte-identical to the historical linear-scan implementation.
+
+``select_record_linear`` (the pre-index O(n) scan, kept verbatim) is
+the oracle; Hypothesis generates record sets with measured and
+transferred records, duplicate scenarios (built via ``keep_best=False``
+so the list really holds collisions), equal-score/equal-distance
+tie-break collisions and borderline transfer confidences, then asserts
+the indexed path returns the same (record_id, tier) for queries across
+every §4.5 tier. A second property checks equivalence *survives
+mutation*: interleaved ``add()`` calls (which update the index
+incrementally) and direct ``records`` mutation (which forces a
+rebuild)."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Wisdom, WisdomRecord
+from repro.core.device import get_device
+from repro.core.wisdom import make_transfer_provenance
+
+DEVICES = ("tpu-v5e", "tpu-v4", "cpu", "tpu-v5-lite")
+DTYPES = ("float32", "bfloat16")
+# Small pools on purpose: collisions (same scenario, same score, same
+# distance) must be common, because the tie-break path is the part of
+# select() most likely to diverge between two implementations.
+DIMS = (8, 16, 64)
+SCORES = (1.0, 2.0, 2.0, 7.5)
+CONFIDENCES = (0.0, 0.29, 0.30, 0.31, 0.9)
+
+
+def measured_records(draw_tuple):
+    (kind, dtype, m, n, score, block) = draw_tuple
+    return WisdomRecord(
+        device_kind=kind, device_family=get_device(kind).family,
+        problem_size=(m, n), dtype=dtype,
+        config={"block": block}, score_us=score,
+        provenance={"strategy": "test", "evaluations": block})
+
+
+def transferred_records(draw_tuple):
+    (kind, dtype, m, n, score, conf) = draw_tuple
+    return WisdomRecord(
+        device_kind=kind, device_family=get_device(kind).family,
+        problem_size=(m, n), dtype=dtype,
+        config={"transferred": True}, score_us=score,
+        provenance=make_transfer_provenance("tpu-v5e", 32, conf, score))
+
+
+measured_st = st.tuples(
+    st.sampled_from(DEVICES), st.sampled_from(DTYPES),
+    st.sampled_from(DIMS), st.sampled_from(DIMS),
+    st.sampled_from(SCORES), st.integers(1, 3)).map(measured_records)
+
+transferred_st = st.tuples(
+    st.sampled_from(DEVICES), st.sampled_from(DTYPES),
+    st.sampled_from(DIMS), st.sampled_from(DIMS),
+    st.sampled_from(SCORES),
+    st.sampled_from(CONFIDENCES)).map(transferred_records)
+
+records_st = st.lists(st.one_of(measured_st, transferred_st),
+                      min_size=0, max_size=24)
+
+query_st = st.tuples(
+    st.sampled_from(DEVICES + ("gpu-h100",)),       # incl. unknown kind
+    st.tuples(st.sampled_from(DIMS + (32,)), st.sampled_from(DIMS)),
+    st.sampled_from(DTYPES + ("float16",)),
+    st.sampled_from((None, 0.0, 0.30, 0.5)))
+
+
+def assert_equivalent(w: Wisdom, query) -> None:
+    kind, problem, dtype, threshold = query
+    got = w.select_record(kind, problem, dtype, threshold)
+    want = w.select_record_linear(kind, problem, dtype, threshold)
+    got_id = got[0].record_id() if got[0] is not None else None
+    want_id = want[0].record_id() if want[0] is not None else None
+    assert (got_id, got[1]) == (want_id, want[1]), \
+        f"indexed {got_id, got[1]} != linear {want_id, want[1]} " \
+        f"for query {query} over {len(w)} records"
+
+
+@settings(max_examples=200, deadline=None)
+@given(records=records_st, queries=st.lists(query_st, min_size=1,
+                                            max_size=8))
+def test_indexed_select_matches_linear_scan(records, queries):
+    # Constructor path: duplicate scenarios allowed to coexist, exactly
+    # like a keep_best=False bulk load.
+    w = Wisdom("k", records)
+    for q in queries:
+        assert_equivalent(w, q)
+
+
+@settings(max_examples=100, deadline=None)
+@given(records=records_st, keep_best=st.lists(st.booleans(), min_size=0,
+                                              max_size=24),
+       queries=st.lists(query_st, min_size=1, max_size=4))
+def test_equivalence_survives_interleaved_adds(records, keep_best,
+                                               queries):
+    """add() maintains the index incrementally (keep-best replacement,
+    lineage no-ops, plain appends) — select between adds must keep
+    matching the oracle, which always reads the raw list."""
+    w = Wisdom("k")
+    for i, r in enumerate(records):
+        w.add(r, keep_best=keep_best[i] if i < len(keep_best) else True)
+        assert_equivalent(w, queries[i % len(queries)])
+    for q in queries:
+        assert_equivalent(w, q)
+
+
+@settings(max_examples=50, deadline=None)
+@given(records=records_st.filter(bool), query=query_st)
+def test_direct_records_mutation_forces_rebuild(records, query):
+    """The index is derived state: appending to (or rebinding) the raw
+    ``records`` list bypasses the incremental hooks, and the next select
+    must notice and rebuild rather than serve a stale answer."""
+    w = Wisdom("k", records[:-1])
+    assert_equivalent(w, query)         # builds the index
+    w.records.append(records[-1])       # behind the index's back
+    assert_equivalent(w, query)
+    w.records = list(records[:1])       # rebind entirely
+    assert_equivalent(w, query)
+
+
+def test_tie_break_collision_is_deterministic():
+    """Two same-scenario same-score records (distinct configs -> distinct
+    record_ids) must resolve identically through both paths, in either
+    insertion order."""
+    a = WisdomRecord("tpu-v5e", "tpu-v5", (64, 64), "float32",
+                     {"block": 1}, 2.0, {"strategy": "a"})
+    b = WisdomRecord("tpu-v5e", "tpu-v5", (64, 64), "float32",
+                     {"block": 2}, 2.0, {"strategy": "b"})
+    for order in ([a, b], [b, a]):
+        w = Wisdom("k", list(order))
+        got = w.select_record("tpu-v5e", (64, 64), "float32")
+        want = w.select_record_linear("tpu-v5e", (64, 64), "float32")
+        assert got[0] is want[0] and got[1] == want[1] == "exact"
+        assert got[0].record_id() == min(a.record_id(), b.record_id())
