@@ -1,14 +1,165 @@
 """Paper Fig 4: the NxN portability matrix — how the optimum of scenario i
-performs in scenario j, as a fraction of scenario j's own optimum."""
+performs in scenario j, as a fraction of scenario j's own optimum — plus
+the cross-*backend* section: TPU-recorded wisdom transferred across the
+lowering boundary to the GPU device family.
+
+Cross-backend protocol (the paper's A4000/A100 portability tables, one
+abstraction further out): the GPU family is held out — the transfer
+engine only sees spaces recorded on ``tpu-v5e`` — and GPU recordings
+(shipped under ``benchmarks/datasets/`` or re-recorded here
+deterministically) act as hidden ground truth. Per scenario,
+:func:`repro.transfer.holdout_report` scores the config the transfer
+tier serves and the cold scenario-distance fallback as fractions of the
+GPU target's recorded optimum.
+
+Pinned gates (the ISSUE 10 acceptance criteria):
+
+  * GPU-recorded spaces exist for >= 2 kernels in ``benchmarks/datasets``;
+  * per kernel, mean transfer fraction-of-optimum across both GPU
+    targets >= ``CROSS_BACKEND_THRESHOLD`` and strictly beats the cold
+    fallback — TPU wisdom moved through the confidence-penalized
+    predictor still beats an untuned GPU;
+  * every cross-backend result carries the backend mismatch penalty
+    (``backend_penalty < 1``) in its audited components, and any served
+    transfer record cleared ``TRANSFER_MIN_CONFIDENCE`` *with* that
+    penalty applied — the regression surface for "no cross-backend
+    record is ever served above the gate without the penalty";
+  * the report is byte-deterministic (two builds, identical JSON).
+
+Run standalone to check the gate / write the report artifact CI uploads::
+
+    python -m benchmarks.portability --check --out portability-report.json
+"""
 
 from __future__ import annotations
 
-from .common import BENCH_SCENARIOS, best_config, score
+import functools
+from pathlib import Path
+
+try:
+    from .common import BENCH_SCENARIOS, best_config, csv_row, score
+except ImportError:     # executed as a script: python benchmarks/portability.py
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import (BENCH_SCENARIOS, best_config, csv_row,
+                                   score)
+
+from repro.core.device import get_device
+from repro.core.registry import get_kernel
+from repro.core.wisdom import TRANSFER_MIN_CONFIDENCE
+from repro.transfer import dump_holdout_report, holdout_report
+from repro.transfer.model import BACKEND_MISMATCH_PENALTY
+from repro.tunebench import SpaceDataset, record_space
+
+DATASET_DIR = Path(__file__).parent / "datasets"
+
+#: Tuned source (TPU wisdom the predictor may see) and the held-out GPU
+#: device family (ground truth only — never a transfer source).
+SOURCE_DEVICE = "tpu-v5e"
+GPU_TARGETS = ("gpu-a100", "gpu-a4000")
+
+#: Pinned regression gate on the per-kernel mean cross-backend transfer
+#: fraction-of-optimum (current values: matmul ~0.96, advec_u ~0.90 —
+#: see docs/gpu-backend.md).
+CROSS_BACKEND_THRESHOLD = 0.85
+
+#: Cross-backend scenarios per kernel, replayed against *both* GPU
+#: targets. The first problem per (kernel, target) pair with a shipped
+#: recording uses it; the rest are re-recorded deterministically
+#: (cost-model objective, exhaustive).
+CROSS_SCENARIOS: dict[str, list[tuple[int, ...]]] = {
+    "matmul": [(256, 256, 256), (512, 512, 512), (512, 512, 2048)],
+    "advec_u": [(64, 64, 128), (128, 128, 128), (32, 64, 128)],
+}
+
+CROSS_REPORT_VERSION = 1
 
 
-def run() -> list[str]:
+@functools.lru_cache(maxsize=None)
+def _dataset(kernel: str, device: str,
+             problem: tuple[int, ...]) -> SpaceDataset:
+    problem_s = "x".join(str(d) for d in problem)
+    shipped = (DATASET_DIR
+               / f"{kernel}--{device}--{problem_s}--float32.space.json")
+    if shipped.exists():
+        return SpaceDataset.load(shipped)
+    return record_space(get_kernel(kernel), problem, "float32", device)
+
+
+def shipped_gpu_kernels() -> list[str]:
+    """Kernels with a GPU-backend recording shipped in the dataset dir."""
+    kernels = set()
+    for path in sorted(DATASET_DIR.glob("*.space.json")):
+        kernel, device = path.name.split("--")[:2]
+        if get_device(device).backend == "gpu":
+            kernels.add(kernel)
+    return sorted(kernels)
+
+
+def _penalty_audit(report: dict) -> bool:
+    """Whether one holdout scenario honors the cross-backend serving
+    contract: the mismatch penalty is recorded in the audited
+    components, and if the transfer tier actually served, its
+    (penalized) confidence cleared the gate."""
+    comp = report["components"]
+    penalized = (comp.get("backends") == "tpu->gpu"
+                 and comp.get("backend_penalty") == BACKEND_MISMATCH_PENALTY
+                 and comp["backend_penalty"] < 1.0
+                 # similarity already *includes* the penalty: it can
+                 # never exceed the penalty factor itself.
+                 and comp["similarity"] <= BACKEND_MISMATCH_PENALTY)
+    if report["transfer"]["tier"] == "transfer":
+        penalized = (penalized
+                     and report["confidence"] >= TRANSFER_MIN_CONFIDENCE)
+    return bool(penalized)
+
+
+def build_cross_backend_report() -> dict:
+    """The full cross-backend evaluation as one JSON-serializable
+    document (no timestamps; byte-identical across runs and hosts)."""
+    kernels = []
+    all_pass = True
+    for kernel in sorted(CROSS_SCENARIOS):
+        scenarios = []
+        for target in GPU_TARGETS:
+            for problem in CROSS_SCENARIOS[kernel]:
+                source = _dataset(kernel, SOURCE_DEVICE, problem)
+                truth = _dataset(kernel, target, problem)
+                rep = holdout_report(source, truth)
+                rep["penalty_applied"] = _penalty_audit(rep)
+                scenarios.append(rep)
+        tx = [s["transfer"]["fraction"] or 0.0 for s in scenarios]
+        fb = [s["fallback"]["fraction"] or 0.0 for s in scenarios]
+        mean_tx = round(sum(tx) / len(tx), 6)
+        mean_fb = round(sum(fb) / len(fb), 6)
+        passed = (mean_tx >= CROSS_BACKEND_THRESHOLD and mean_tx > mean_fb
+                  and all(s["penalty_applied"] for s in scenarios))
+        all_pass = all_pass and passed
+        kernels.append({
+            "kernel": kernel,
+            "mean_transfer_fraction": mean_tx,
+            "mean_fallback_fraction": mean_fb,
+            "threshold": CROSS_BACKEND_THRESHOLD,
+            "pass": passed,
+            "scenarios": scenarios,
+        })
+    gpu_kernels = shipped_gpu_kernels()
+    all_pass = all_pass and len(gpu_kernels) >= 2
+    return {
+        "version": CROSS_REPORT_VERSION,
+        "source_device": SOURCE_DEVICE,
+        "gpu_targets": list(GPU_TARGETS),
+        "threshold": CROSS_BACKEND_THRESHOLD,
+        "shipped_gpu_kernels": gpu_kernels,
+        "pass": all_pass,
+        "kernels": kernels,
+    }
+
+
+def run():
+    # -- Fig 4: same-device cross-scenario matrix -----------------------------
     kernels = sorted({s.kernel for s in BENCH_SCENARIOS})
-    rows = ["portability,kernel,from_scenario,to_scenario,fraction"]
+    yield "portability,kernel,from_scenario,to_scenario,fraction"
     for kernel in kernels:
         scs = [s for s in BENCH_SCENARIOS if s.kernel == kernel]
         opt = {s.key: best_config(s.key) for s in scs}
@@ -16,6 +167,59 @@ def run() -> list[str]:
             cfg_i, _ = opt[si.key]
             for sj in scs:
                 frac = opt[sj.key][1] / score(sj, cfg_i)
-                rows.append(f"portability,{kernel},{si.key},{sj.key},"
-                            f"{frac:.3f}")
-    return rows
+                yield (f"portability,{kernel},{si.key},{sj.key},"
+                       f"{frac:.3f}")
+
+    # -- cross-backend: TPU wisdom -> held-out GPU family ---------------------
+    yield csv_row("portability_xbackend", "kernel", "target", "problem",
+                  "transfer_fraction", "fallback_fraction", "confidence",
+                  "penalty_applied", "pass")
+    report = build_cross_backend_report()
+    again = build_cross_backend_report()
+    assert dump_holdout_report(report) == dump_holdout_report(again), \
+        "cross-backend portability report is not deterministic"
+    for k in report["kernels"]:
+        for s in k["scenarios"]:
+            problem = s["scenario"].split("|")[1]
+            yield csv_row("portability_xbackend", k["kernel"],
+                          s["target_device"], problem,
+                          s["transfer"]["fraction"],
+                          s["fallback"]["fraction"],
+                          s["confidence"], int(s["penalty_applied"]),
+                          int(k["pass"]))
+    assert report["pass"], (
+        "cross-backend portability regression: a kernel's mean transfer "
+        "fraction dropped below its gate, behind the cold fallback, or a "
+        "cross-backend record escaped the backend penalty")
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.portability")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless every pinned gate passes")
+    ap.add_argument("--out", default=None, help="write report JSON here")
+    args = ap.parse_args(argv)
+    report = build_cross_backend_report()
+    text = dump_holdout_report(report)
+    if args.out:
+        Path(args.out).write_text(text)
+        print(f"report -> {args.out}")
+    for k in report["kernels"]:
+        state = "ok  " if k["pass"] else "FAIL"
+        print(f"{state} {k['kernel']}: cross-backend transfer "
+              f"{k['mean_transfer_fraction']:.4f} vs fallback "
+              f"{k['mean_fallback_fraction']:.4f} "
+              f"(threshold {k['threshold']:.2f}, "
+              f"{len(k['scenarios'])} scenarios over "
+              f"{len(report['gpu_targets'])} GPU targets)")
+    print(f"shipped GPU-recorded kernels: "
+          f"{', '.join(report['shipped_gpu_kernels'])}")
+    print("overall:", "PASS" if report["pass"] else "FAIL")
+    if args.check and not report["pass"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -139,7 +139,8 @@ def make_fleet_provenance(strategy: str, evals: int, objective: str,
 def make_transfer_provenance(source_device: str, source_entries: int,
                              confidence: float, predicted_us: float,
                              predictor: str = "ridge+capability",
-                             round_: int = 0) -> dict:
+                             round_: int = 0,
+                             backends: str = "") -> dict:
     """Provenance for a cross-device *transferred* record (repro.transfer).
 
     Deterministic like fleet provenance — no timestamp, host, or user: a
@@ -148,9 +149,12 @@ def make_transfer_provenance(source_device: str, source_entries: int,
     to the same target produces a byte-identical record. ``confidence``
     is the gate ``Wisdom.select`` applies before serving the prediction;
     ``predicted_us`` is what the fleet verification loop compares
-    observed serve latency against.
+    observed serve latency against. ``backends`` (e.g. ``"tpu->gpu"``)
+    marks a cross-backend prediction — its confidence already carries
+    the backend-mismatch penalty; omitted (and absent from the dict, to
+    keep pre-GPU records byte-identical) for same-backend transfers.
     """
-    return {
+    prov = {
         "source": "transfer",
         "source_device": source_device,
         "source_entries": int(source_entries),
@@ -160,6 +164,9 @@ def make_transfer_provenance(source_device: str, source_entries: int,
         "round": int(round_),
         "jax_version": jax.__version__,
     }
+    if backends:
+        prov["backends"] = backends
+    return prov
 
 
 def merge_lineage(*records: "WisdomRecord", extra: Sequence[dict] = ()

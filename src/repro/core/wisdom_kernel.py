@@ -56,7 +56,11 @@ def resolve_backend(backend: str | None = None) -> str:
     if b not in _VALID_BACKENDS:
         raise ValueError(f"bad backend {b!r}; want one of {_VALID_BACKENDS}")
     if b == "auto":
-        b = "pallas" if jax.default_backend() == "tpu" else "reference"
+        # Real accelerators run the Pallas lowering (Mosaic on TPU,
+        # Triton on GPU — see kernels/_lowering.py); hosts without one
+        # serve the reference oracle.
+        b = ("pallas" if jax.default_backend() in ("tpu", "gpu")
+             else "reference")
     return b
 
 

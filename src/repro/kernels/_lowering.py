@@ -1,0 +1,95 @@
+"""Backend-aware Pallas lowering: one place that decides compiler params.
+
+Every kernel's ``_build`` needs the same decision: which compiler-param
+object (if any) may ride along with ``pl.pallas_call``. The old guard —
+"``pltpu`` imported, so pass TPU params" — was wrong on any machine
+where the TPU package *imports* but the active device is a GPU or a CPU
+host: Mosaic-only kwargs (``dimension_semantics``) would reach a Triton
+or interpreter lowering and fail. The decision belongs to the active
+:class:`~repro.core.device.DeviceSpec`'s ``backend``, not to what
+happens to be importable.
+
+:func:`lowering_kwargs` is that decision:
+
+* backend ``"tpu"``   -> Mosaic ``TPUCompilerParams(dimension_semantics)``
+* backend ``"gpu"``   -> ``TritonCompilerParams(num_warps, num_stages)``
+* backend ``"cpu"``   -> no params (the interpreter takes none)
+* ``interpret=True``  -> no params, on any backend (the CI story: GPU
+  and TPU lowerings both run under the Pallas interpreter on hosts
+  without the hardware, and the interpreter rejects backend params)
+
+Kernels still own their *structural* backend choices (scratch memory,
+grid shape); this module only centralizes the compiler-param gate so no
+kernel can re-grow the ``pltpu is None`` bug.
+"""
+
+from __future__ import annotations
+
+from repro.core.device import current_device
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+try:
+    from jax.experimental.pallas import triton as pltriton
+except Exception:  # pragma: no cover
+    pltriton = None
+
+__all__ = ["active_backend", "lowering_kwargs"]
+
+
+def active_backend() -> str:
+    """The active device's lowering backend ("tpu" | "gpu" | "cpu")."""
+    return current_device().backend
+
+
+def _tpu_params(dimension_semantics):
+    cp = getattr(pltpu, "CompilerParams",
+                 getattr(pltpu, "TPUCompilerParams", None))
+    if cp is None:  # pragma: no cover — very old pallas
+        return {}
+    return {"compiler_params":
+            cp(dimension_semantics=tuple(dimension_semantics))}
+
+
+def _gpu_params(num_warps, num_stages):
+    cp = getattr(pltriton, "CompilerParams",
+                 getattr(pltriton, "TritonCompilerParams", None))
+    if cp is None:  # pragma: no cover — pallas without a Triton backend
+        return {}
+    kw = {}
+    if num_warps is not None:
+        kw["num_warps"] = int(num_warps)
+    if num_stages is not None:
+        kw["num_stages"] = int(num_stages)
+    return {"compiler_params": cp(**kw)}
+
+
+def lowering_kwargs(*, dimension_semantics=(), num_warps=None,
+                    num_stages=None, interpret: bool = False,
+                    backend: str | None = None) -> dict:
+    """The ``pl.pallas_call`` kwargs the active backend accepts.
+
+    ``dimension_semantics`` feeds the Mosaic (TPU) params; ``num_warps``
+    and ``num_stages`` feed the Triton (GPU) params — callers pass both
+    sets and exactly one (or neither) is used. Returns ``{}`` under
+    ``interpret`` and on backends whose param class is unavailable, so
+    the call site never needs its own availability guard.
+
+    Example::
+
+        kwargs = lowering_kwargs(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            num_warps=4, num_stages=2, interpret=interpret)
+        pl.pallas_call(body, grid=grid, ..., **kwargs)
+    """
+    if interpret:
+        return {}
+    b = backend if backend is not None else active_backend()
+    if b == "tpu" and pltpu is not None and dimension_semantics:
+        return _tpu_params(dimension_semantics)
+    if b == "gpu" and pltriton is not None:
+        return _gpu_params(num_warps, num_stages)
+    return {}

@@ -25,14 +25,10 @@ from repro.core import KernelBuilder, Workload, register
 from repro.core.builder import probe_array
 
 from . import ref as _ref
+from ._lowering import lowering_kwargs
 from ._stencil_common import (FieldView, HALO_BLK, check_blocks, field_specs,
                               out_spec, stencil_grid, stencil_hbm_bytes,
                               stencil_vmem_bytes)
-
-try:  # TPU compiler params are only importable where pallas TPU exists
-    from jax.experimental.pallas import tpu as pltpu
-except Exception:  # pragma: no cover
-    pltpu = None
 
 
 builder = KernelBuilder("advec_u", source="repro.kernels.advec_u")
@@ -82,13 +78,14 @@ def _build(config, problem, meta, interpret: bool = False):
     scal_spec = pl.BlockSpec((1, 4), lambda a, b: (0, 0))
     fspecs = field_specs(problem, bz, by, to_zy)
     in_specs = [scal_spec] + fspecs * 3
-    kwargs = {}
-    if not interpret and pltpu is not None:
-        sem = (config["dim_semantics"],) * 2
-        cp = getattr(pltpu, "CompilerParams",
-                     getattr(pltpu, "TPUCompilerParams", None))
-        if cp is not None:
-            kwargs["compiler_params"] = cp(dimension_semantics=sem)
+    # Compiler params are gated on the active DeviceSpec.backend (not on
+    # whether pltpu merely imports): Mosaic dimension_semantics on TPU,
+    # Triton warps/stages on GPU, nothing under interpret.
+    kwargs = lowering_kwargs(
+        dimension_semantics=(config["dim_semantics"],) * 2,
+        num_warps=8 if by >= 64 else 4,
+        num_stages=min(4, 1 + config["unroll_z"]),
+        interpret=interpret)
 
     dtype = meta[0].dtype
     call = pl.pallas_call(

@@ -21,14 +21,10 @@ from repro.core import KernelBuilder, Workload, register
 from repro.core.builder import probe_array
 
 from . import ref as _ref
+from ._lowering import lowering_kwargs
 from ._stencil_common import (FieldView, HALO_BLK, check_blocks, field_specs,
                               out_spec, stencil_grid, stencil_hbm_bytes,
                               stencil_vmem_bytes)
-
-try:
-    from jax.experimental.pallas import tpu as pltpu
-except Exception:  # pragma: no cover
-    pltpu = None
 
 
 builder = KernelBuilder("diff_uvw", source="repro.kernels.diff_uvw")
@@ -87,14 +83,14 @@ def _single_kernel(unroll_z, *refs):
 
 
 def _compiler_kwargs(config, interpret):
-    if interpret or pltpu is None:
-        return {}
-    cp = getattr(pltpu, "CompilerParams",
-                 getattr(pltpu, "TPUCompilerParams", None))
-    if cp is None:
-        return {}
-    return {"compiler_params":
-            cp(dimension_semantics=(config["dim_semantics"],) * 2)}
+    # Gated on the active DeviceSpec.backend (not on whether pltpu
+    # merely imports): Mosaic dimension_semantics reach only a TPU
+    # lowering, Triton warps/stages only a GPU one.
+    return lowering_kwargs(
+        dimension_semantics=(config["dim_semantics"],) * 2,
+        num_warps=8 if config["block_y"] >= 64 else 4,
+        num_stages=min(4, 1 + config["unroll_z"]),
+        interpret=interpret)
 
 
 @builder.build

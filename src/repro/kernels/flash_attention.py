@@ -25,6 +25,7 @@ from repro.core import KernelBuilder, Workload, register
 from repro.core.builder import probe_array
 
 from . import ref as _ref
+from ._lowering import active_backend, lowering_kwargs
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -106,13 +107,16 @@ def _make_builder(causal: bool) -> KernelBuilder:
         gq, gk = S // bq, S // bk
         scale = 1.0 / (D ** 0.5)
 
-        kwargs = {}
-        if not interpret and pltpu is not None:
-            cp = getattr(pltpu, "CompilerParams",
-                         getattr(pltpu, "TPUCompilerParams", None))
-            if cp is not None:
-                sem = (config["dim_semantics"],) * 2 + ("arbitrary",)
-                kwargs["compiler_params"] = cp(dimension_semantics=sem)
+        if active_backend() == "gpu":
+            # No Triton lowering yet (see docs/gpu-backend.md's lowering
+            # matrix); ops.attention never routes here on GPU devices.
+            raise NotImplementedError(
+                f"{name} has no GPU lowering; use kernels.ops.attention, "
+                f"which falls back to the reference path on GPU")
+        kwargs = lowering_kwargs(
+            dimension_semantics=(config["dim_semantics"],) * 2
+            + ("arbitrary",),
+            interpret=interpret)
         if pltpu is None:  # pragma: no cover
             raise RuntimeError("pallas TPU backend unavailable")
 

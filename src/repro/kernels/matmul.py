@@ -20,6 +20,7 @@ from repro.core import KernelBuilder, Workload, register
 from repro.core.builder import probe_array
 
 from . import ref as _ref
+from ._lowering import active_backend, lowering_kwargs
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -56,8 +57,48 @@ def _mm_kernel(nk: int, a_ref, b_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _mm_gpu_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def _build_gpu(config, problem, meta, interpret: bool):
+    """Triton-shaped lowering: a 2-D (m, n) grid with the full K stripe
+    per program — accumulation stays in registers, so no TPU VMEM
+    scratch is involved. ``block_k`` survives as the software-pipelining
+    depth (``num_stages``) instead of a grid axis."""
+    m, n, k = problem
+    bm, bn, bk = config["block_m"], config["block_n"], config["block_k"]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    if m % bm or n % bn:
+        raise ValueError(f"blocks ({bm},{bn}) do not tile {problem}")
+    if config["grid_order"] == "mnk":
+        grid = (m // bm, n // bn)
+        ij = lambda p0, p1: (p0, p1)  # noqa: E731
+    else:
+        grid = (n // bn, m // bm)
+        ij = lambda p0, p1: (p1, p0)  # noqa: E731
+
+    kwargs = lowering_kwargs(
+        num_warps=8 if bm * bn >= 256 * 128 else 4,
+        num_stages=2 if bk >= 512 else 3,
+        interpret=interpret, backend="gpu")
+    return pl.pallas_call(
+        _mm_gpu_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, k), lambda p0, p1: (ij(p0, p1)[0], 0)),
+                  pl.BlockSpec((k, bn), lambda p0, p1: (0, ij(p0, p1)[1]))],
+        out_specs=pl.BlockSpec((bm, bn), lambda p0, p1: ij(p0, p1)),
+        out_shape=jax.ShapeDtypeStruct((m, n), meta[0].dtype),
+        interpret=interpret, **kwargs)
+
+
 @builder.build
 def _build(config, problem, meta, interpret: bool = False):
+    backend = active_backend()
+    if backend == "gpu":
+        return _build_gpu(config, problem, meta, interpret)
     m, n, k = problem
     bm, bn, bk = config["block_m"], config["block_n"], config["block_k"]
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
@@ -83,14 +124,10 @@ def _build(config, problem, meta, interpret: bool = False):
         i, j = ij(p0, p1)
         return (i, j)
 
-    kwargs = {}
-    if not interpret and pltpu is not None:
-        cp = getattr(pltpu, "CompilerParams",
-                     getattr(pltpu, "TPUCompilerParams", None))
-        if cp is not None:
-            sem = (config["dim_semantics"], config["dim_semantics"],
-                   "arbitrary")
-            kwargs["compiler_params"] = cp(dimension_semantics=sem)
+    kwargs = lowering_kwargs(
+        dimension_semantics=(config["dim_semantics"],
+                             config["dim_semantics"], "arbitrary"),
+        interpret=interpret, backend=backend)
 
     dtype = meta[0].dtype
     if pltpu is None:  # pragma: no cover

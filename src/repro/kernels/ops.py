@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import WisdomKernel, resolve_backend
+from repro.core.device import current_device
 
 from . import advec_u as _advec_mod
 from . import diff_uvw as _diff_mod
@@ -66,6 +67,9 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
     default_scale = scale is None or abs(scale - D ** -0.5) < 1e-12
     flashable = (
         resolve_backend() in ("pallas", "interpret")
+        # flash has a TPU (Mosaic) lowering only — on GPU devices the
+        # full-featured jnp oracle serves instead (docs/gpu-backend.md)
+        and current_device().backend != "gpu"
         and window is None and softcap is None and default_scale
         and kv_offset == 0 and Sq == Sk
         and Sq % 128 == 0 and D % 128 == 0

@@ -110,7 +110,7 @@ def _cmd_report(args) -> int:
 
 def _cmd_roofline(args) -> int:
     device = get_device(args.device)
-    vpu_f32 = device.flops_f32 / 8.0
+    vpu_f32 = device.flops_f32 / device.vector_ratio
     rows = [
         ("peak bf16 (MXU)", f"{device.flops_bf16 / 1e12:.1f} TFLOP/s"),
         ("peak f32 (MXU)", f"{device.flops_f32 / 1e12:.1f} TFLOP/s"),
@@ -124,7 +124,11 @@ def _cmd_roofline(args) -> int:
                          f"FLOP/byte"),
         ("ridge AI f32 VPU", f"{vpu_f32 / device.hbm_bw:.1f} FLOP/byte"),
     ]
-    print(f"roofline: {device.kind} (family {device.family})")
+    print(f"roofline: {device.kind} (family {device.family}, "
+          f"backend {device.backend})"
+          + (" — ESTIMATED peaks cloned from the "
+             f"{device.backend} baseline; every roof below is a guess"
+             if device.estimated else ""))
     for k, v in rows:
         print(f"  {k:18} {v}")
     if args.kernel:

@@ -129,6 +129,11 @@ class KernelProfile:
     achieved_bw_frac: float = 0.0
     baseline_us: float | None = None
     drift: float | None = None
+    #: True when the device's peaks are guesses cloned from a backend
+    #: baseline (``DeviceSpec.estimated``): every roofline fraction and
+    #: bottleneck class below is then relative to *assumed* roofs and
+    #: reports must say so.
+    estimated: bool = False
 
     def scenario_key(self) -> tuple:
         return (self.device_kind, self.problem_size, self.dtype)
@@ -174,6 +179,8 @@ class KernelProfile:
             out["baseline_us"] = _r(self.baseline_us)
         if self.drift is not None:
             out["drift"] = _r(self.drift)
+        if self.estimated:
+            out["estimated"] = True
         return out
 
     @staticmethod
@@ -220,6 +227,7 @@ class KernelProfile:
             achieved_bw_frac=float(d.get("achieved_bw_frac", 0.0)),
             baseline_us=None if baseline is None else float(baseline),
             drift=None if drift is None else float(drift),
+            estimated=bool(d.get("estimated", False)),
         )
 
 
@@ -273,6 +281,7 @@ def profile_from_workload(w, device: DeviceSpec, dtype: str,
         achieved_bw_frac=_r(memory_us / lat if lat > 0 else 0.0),
         baseline_us=None if baseline_us is None else _r(baseline_us),
         drift=None if drift is None else _r(drift),
+        estimated=bool(device.estimated),
     )
 
 

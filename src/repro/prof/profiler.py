@@ -323,6 +323,7 @@ def summarize(profiles: list[KernelProfile]) -> dict:
             "mean_latency_us": round(
                 sum(p.latency_us for p in ps) / n, 6),
             "drifted": sum(1 for p in ps if p.has_drift()),
+            "estimated": sum(1 for p in ps if p.estimated),
         }
     return out
 

@@ -18,6 +18,8 @@ Both are pure functions of their inputs: same documents, same bytes.
 
 from __future__ import annotations
 
+from repro.core.device import get_device
+
 from .guided import rerank_gate, surrogate_rerank
 from .profile import KernelProfile
 from .profiler import summarize
@@ -64,6 +66,9 @@ def classify_dataset(dataset) -> dict:
         "dataset": dataset.name(),
         "kernel": dataset.kernel,
         "scenario": dataset.scenario_key(),
+        # Unknown hardware gets baseline-cloned peaks: every roofline
+        # number below is then relative to *assumed* roofs.
+        "estimated": bool(get_device(dataset.device_kind).estimated),
         "bottleneck": bprof.get("bottleneck", "unprofiled"),
         "best_us": round(best.score_us, 6) if best else None,
         "best_arithmetic_intensity": bprof.get("arithmetic_intensity"),
@@ -101,7 +106,8 @@ def render_attribution(datasets, rerank: bool = True) -> str:
             f"best={c['best_us']:.3f}us "
             f"AI={ai if ai is not None else '?'} "
             f"roofline-frac={f'{rf:.3f}' if rf is not None else '?'} "
-            f"[space: {dist or 'unprofiled'}]")
+            f"[space: {dist or 'unprofiled'}]"
+            + (" (estimated peaks)" if c["estimated"] else ""))
 
     if rerank:
         _section(lines,
@@ -143,5 +149,7 @@ def render_profiles(profiles: list[KernelProfile]) -> str:
             f"dominant={row['dominant']} [{dist}] "
             f"mean-roofline-frac={row['mean_roofline_fraction']:.3f} "
             f"mean-latency={row['mean_latency_us']:.3f}us "
-            f"drifted={row['drifted']}")
+            f"drifted={row['drifted']}"
+            + (f" [estimated peaks: {row['estimated']}/{row['launches']}]"
+               if row.get("estimated") else ""))
     return "\n".join(lines) + "\n"

@@ -25,7 +25,26 @@ from dataclasses import dataclass
 from repro.core.device import (CAPABILITY_AXES, DeviceSpec,
                                capability_vector, get_device)
 
-__all__ = ["DeviceModel"]
+__all__ = ["BACKEND_MISMATCH_PENALTY", "ESTIMATED_SIMILARITY_CAP",
+           "DeviceModel"]
+
+#: Similarity multiplier when source and target use different lowering
+#: backends (tpu vs gpu vs cpu). Capability ratios cannot see an
+#: instruction-set change — a GPU with TPU-like peaks still runs a
+#: Triton lowering with a different tiling granule, scheduling model,
+#: and memory hierarchy — so cross-backend predictions carry a flat
+#: penalty on top of the ratio-derived similarity. The paper's pair
+#: (A4000 -> A100) transfers *within* a backend; across backends the
+#: confidence must reflect that the evidence is one abstraction weaker.
+BACKEND_MISMATCH_PENALTY = 0.5
+
+#: Similarity ceiling when either spec is ``estimated`` (unknown
+#: hardware whose peaks were cloned from a backend baseline). The cap
+#: is chosen so the best possible confidence — sqrt(cap) x 1.0 ≈ 0.22 —
+#: stays below ``TRANSFER_MIN_CONFIDENCE`` (0.30): a prediction scaled
+#: through guessed capability ratios must never be *served*, only
+#: surfaced for verification.
+ESTIMATED_SIMILARITY_CAP = 0.05
 
 
 @dataclass(frozen=True)
@@ -87,15 +106,38 @@ class DeviceModel:
 
     # -- similarity ------------------------------------------------------------
 
+    def backend_penalty(self) -> float:
+        """1.0 when source and target share a lowering backend,
+        :data:`BACKEND_MISMATCH_PENALTY` otherwise. Exposed separately
+        so the predictor can record it in a result's components — the
+        regression surface for "no cross-backend record is ever served
+        without the penalty applied"."""
+        if self.source.backend == self.target.backend:
+            return 1.0
+        return BACKEND_MISMATCH_PENALTY
+
+    def estimated(self) -> bool:
+        """True when either endpoint's peaks are guesses (see
+        ``DeviceSpec.estimated``)."""
+        return bool(self.source.estimated or self.target.estimated)
+
     def similarity(self) -> float:
-        """Capability similarity in (0, 1]: ``exp(-rms(log2 ratios))``.
+        """Capability similarity in (0, 1]: ``exp(-rms(log2 ratios))``,
+        times :meth:`backend_penalty` for cross-backend pairs, capped at
+        :data:`ESTIMATED_SIMILARITY_CAP` when either spec is estimated.
 
         1.0 for identical specs; ~0.5 for the shipped tpu-v5e/tpu-v4
-        pair (sibling accelerators, 1.4-2x apart per axis); effectively
-        0 for tpu -> cpu (orders of magnitude apart everywhere). The RMS
-        over axes keeps the scale independent of how many capability
-        axes exist.
+        pair (sibling accelerators, 1.4-2x apart per axis); ~0.2 for
+        tpu-v5e -> gpu-a100 (comparable peaks, different backend);
+        effectively 0 for tpu -> cpu (orders of magnitude apart
+        everywhere, and a different backend on top). The RMS over axes
+        keeps the scale independent of how many capability axes exist.
+        The estimated cap floors the resulting confidence below the
+        serving gate — ratios against guessed peaks are not evidence.
         """
         logs = [math.log2(r) for r in self.ratios().values()]
         rms = math.sqrt(sum(x * x for x in logs) / len(logs))
-        return math.exp(-rms)
+        sim = math.exp(-rms) * self.backend_penalty()
+        if self.estimated():
+            sim = min(sim, ESTIMATED_SIMILARITY_CAP)
+        return sim

@@ -153,12 +153,15 @@ class TransferResult:
                     f"{self.source_device} -> {self.target_device} failed "
                     f"the correctness oracle")
         target = get_device(self.target_device)
+        backends = self.components.get("backends", "")
+        cross = backends and len(set(backends.split("->"))) > 1
         provenance = make_transfer_provenance(
             source_device=self.source_device,
             source_entries=int(self.components.get("entries", 0)),
             confidence=self.confidence,
             predicted_us=round(top.predicted_us, 6),
-            predictor=self.components.get("calibration", "capability"))
+            predictor=self.components.get("calibration", "capability"),
+            backends=backends if cross else "")
         if gate is not None:
             provenance = gate.stamp(provenance, self.kernel, verdict)
         return WisdomRecord(
@@ -273,6 +276,13 @@ def transfer_scenario(dataset: SpaceDataset, target_kind: str,
             "calibration": calibration,
             "entries": len(dataset.evaluations),
             "transferable": len(ranked),
+            # Cross-backend bookkeeping: similarity above already
+            # *includes* the penalty (and the estimated-spec floor);
+            # recording the factor separately makes "the penalty was
+            # applied" auditable on every result and record.
+            "backends": f"{source.backend}->{target.backend}",
+            "backend_penalty": round(model.backend_penalty(), 6),
+            "estimated": model.estimated(),
         })
 
 

@@ -14,8 +14,10 @@ described by a :class:`~repro.core.workload.Workload`:
 
 Efficiencies model the hardware structure that makes tuning non-trivial:
 
-  * MXU alignment: each matmul tile dim is padded to the systolic-array
-    granule (128 lanes / 8 sublanes); utilization is actual/padded.
+  * MXU alignment: each matmul tile dim is padded to the device's
+    matmul granule (128 on the TPU systolic array, 16 on GPU tensor
+    cores — ``DeviceSpec.matmul_granule``); utilization is
+    actual/padded.
   * VPU lane/sublane utilization for elementwise/stencil work.
   * Instruction-level parallelism from unrolling saturates a deep pipeline.
   * Streaming efficiency grows with the contiguous (lane-dim) extent of each
@@ -107,16 +109,20 @@ class CostModel:
 
         # --- compute term ---
         if w.mxu_tile is not None:
+            # matmul-unit tiles pad to the device's granule (128 on the
+            # TPU systolic array, 16 on GPU tensor cores)
+            g = self.device.matmul_granule
             m, n, k = w.mxu_tile
-            eff = (_align_eff(m, 128) * _align_eff(n, 128)
-                   * _align_eff(k, 128))
+            eff = (_align_eff(m, g) * _align_eff(n, g)
+                   * _align_eff(k, g))
             eff = max(eff, 0.02)
         else:
             # VPU work: (8, 128) native tile
             eff = _align_eff(w.lane_extent, 128) * _align_eff(
                 w.sublane_extent, 8)
-            # the VPU peaks far below the MXU
-            peak = peak / 8.0
+            # the vector unit peaks below the matmul unit (8x on TPU;
+            # per-device on GPU, where CUDA-core f32 is a smaller step)
+            peak = peak / self.device.vector_ratio
         ilp = min(1.0, (0.55 + 0.45 * min(w.unroll_ways, self.pipeline_depth)
                         / self.pipeline_depth))
         t_compute = w.flops / (peak * eff * ilp)
